@@ -1,0 +1,87 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from artifacts
+(experiments/dryrun/*.json, experiments/perf/*.json, experiments/paper/*).
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline_table import load_records
+
+
+def fmt_case(r):
+    return (f"| {r['arch']} | {r['shape']} | {r.get('variant','baseline')} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.3f} "
+            f"| {r['memory']['peak_bytes']/1e9:.2f} "
+            f"| {r['memory'].get('peak_bytes_tpu_adjusted', 0)/1e9:.2f} |")
+
+
+HEAD = ("| arch | shape | variant | C ms | M ms | X ms | dominant "
+        "| useful | GB raw | GB tpu-adj |")
+SEP = "|---" * 10 + "|"
+
+
+def roofline_section() -> str:
+    recs = load_records("experiments/dryrun")
+    out = ["### Single-pod (16x16 = 256 chips) baseline — all 40 pairs", "",
+           HEAD, SEP]
+    skips = []
+    for r in recs:
+        if r["mesh"] != "pod16x16":
+            continue
+        if r["status"] == "skip":
+            skips.append(f"* `{r['arch']} x {r['shape']}`: {r['reason']}")
+            continue
+        out.append(fmt_case(r))
+    out += ["", "Documented skips:", *skips, "",
+            "### Multi-pod (2x16x16 = 512 chips) — compile evidence", "",
+            "| arch | shape | status | compile s | GB/chip (adj) |", "|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != "pod2x16x16":
+            continue
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | — | — |")
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['status']} "
+                f"| {r.get('compile_s','—')} "
+                f"| {r['memory'].get('peak_bytes_tpu_adjusted',0)/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def perf_section() -> str:
+    recs = []
+    for fn in sorted(glob.glob("experiments/perf/*.json")):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    if not recs:
+        return "(no variant records yet)"
+    out = [HEAD, SEP]
+    for r in recs:
+        if r["status"] == "ok":
+            out.append(fmt_case(r))
+    return "\n".join(out)
+
+
+def main():
+    text = open("EXPERIMENTS.md").read()
+    for marker, gen in (("ROOFLINE_TABLE", roofline_section),
+                        ("PERF_TABLE", perf_section)):
+        begin = f"<!-- BEGIN {marker} -->"
+        end = f"<!-- END {marker} -->"
+        if begin in text:
+            pre, rest = text.split(begin, 1)
+            _, post = rest.split(end, 1)
+            text = pre + begin + "\n" + gen() + "\n" + end + post
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Aggregate the dry-run JSONs (experiments/dryrun/) into the §Roofline
+table: per (arch x shape x mesh) the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and memory per chip."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| dominant | useful ratio | GB/chip |")
+SEP = "|---" * 9 + "|"
+
+
+def load_records(dirname: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table_markdown(recs: List[Dict], mesh: str = "pod16x16") -> str:
+    lines = [HEADER, SEP]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — "
+                         f"| SKIP | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} "
+                         f"| ERROR: {r.get('error','')[:60]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.3f} "
+            f"| {r['memory']['peak_bytes']/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def summary(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    err = [r for r in recs if r["status"] == "error"]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return {"ok": len(ok), "skip": len(skip), "error": len(err),
+            "dominant_histogram": doms,
+            "errors": [(r["arch"], r["shape"], r["mesh"]) for r in err]}

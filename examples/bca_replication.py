@@ -1,0 +1,38 @@
+"""The paper's full loop on its own models: profile curves -> BCA (Eq. 2)
+-> memory freed -> replication plan -> simulated Table IV.
+
+    PYTHONPATH=src python examples/bca_replication.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config                              # noqa: E402
+from repro.core import (H100_PAPER, BatchingConfigurationAdvisor,  # noqa: E402
+                        ReplicationPlanner, decode_curves, max_batch_for,
+                        replication_sweep, simulate_decode,
+                        slo_from_reference)
+
+CTX = 331
+
+for name in ("opt-1.3b", "opt-2.7b"):
+    cfg = get_config(name)
+    mb = min(max_batch_for(cfg, H100_PAPER, ctx=CTX), 512)
+    curves = decode_curves(cfg, H100_PAPER, ctx=CTX, max_batch=mb)
+    print(f"\n=== {name} (MAX batch {mb}) ===")
+    for label, f in (("strict", 2.0), ("relaxed", 4.0)):
+        slo = slo_from_reference(curves, 32, f)
+        res = BatchingConfigurationAdvisor(curves, slo_s=slo, eps=0.1).solve()
+        print(f"  BCA {label:8s}: {res.summary()}")
+        print(f"    -> KV freed vs MAX: {res.kv_freed_fraction*100:.1f}% "
+              f"of capacity")
+    plan = ReplicationPlanner(H100_PAPER, cfg, ctx=CTX).plan(
+        res.b_opt, max_replicas=4)
+    print(f"  replication plan: {plan.summary()}")
+    t_max = simulate_decode(cfg, H100_PAPER, batch=mb, n_replicas=1,
+                            ctx=CTX).throughput_tok_s
+    print(f"  MAX single replica: {t_max:.0f} tok/s")
+    for r in replication_sweep(cfg, H100_PAPER, batch=res.b_opt, ctx=CTX,
+                               max_replicas=plan.n_replicas):
+        gain = r.throughput_tok_s / t_max - 1
+        print(f"  {r.summary()}  ({gain:+.1%} vs MAX)")

@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, reduced  # noqa
+from repro.configs.registry import get_config, list_configs, ASSIGNED, PAPER_MODELS  # noqa

@@ -1,0 +1,4 @@
+"""Config module for --arch arctic-480b (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["arctic-480b"]

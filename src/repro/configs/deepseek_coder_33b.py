@@ -1,0 +1,4 @@
+"""Config module for --arch deepseek-coder-33b (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["deepseek-coder-33b"]

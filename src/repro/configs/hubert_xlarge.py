@@ -1,0 +1,4 @@
+"""Config module for --arch hubert-xlarge (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["hubert-xlarge"]

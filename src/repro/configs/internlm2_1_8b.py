@@ -1,0 +1,4 @@
+"""Config module for --arch internlm2-1.8b (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["internlm2-1.8b"]

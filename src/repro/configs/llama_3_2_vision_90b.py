@@ -1,0 +1,4 @@
+"""Config module for --arch llama-3.2-vision-90b (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["llama-3.2-vision-90b"]

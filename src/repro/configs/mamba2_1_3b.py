@@ -1,0 +1,4 @@
+"""Config module for --arch mamba2-1.3b (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["mamba2-1.3b"]

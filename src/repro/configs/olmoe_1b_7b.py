@@ -1,0 +1,4 @@
+"""Config module for --arch olmoe-1b-7b (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["olmoe-1b-7b"]

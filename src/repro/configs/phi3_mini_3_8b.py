@@ -1,0 +1,4 @@
+"""Config module for --arch phi3-mini-3.8b (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["phi3-mini-3.8b"]

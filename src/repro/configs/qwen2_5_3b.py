@@ -1,0 +1,4 @@
+"""Config module for --arch qwen2.5-3b (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["qwen2.5-3b"]

@@ -1,0 +1,4 @@
+"""Config module for --arch zamba2-7b (see registry for the full table)."""
+from repro.configs.registry import ASSIGNED
+
+CONFIG = ASSIGNED["zamba2-7b"]

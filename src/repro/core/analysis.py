@@ -1,0 +1,402 @@
+"""HLO census — the repo's Nsight-Compute analogue.
+
+Parses optimized (post-SPMD, per-device) HLO text from
+``compiled.as_text()`` and produces per-op-class FLOP / HBM-byte /
+collective-byte totals. This is the measurement substrate for everything
+the paper does with Nsight: arithmetic-intensity per kernel class (Fig. 1),
+DRAM-saturation attribution (Sec. V), and the roofline terms (Table II).
+
+Key properties:
+  * ``while`` bodies are multiplied by their ``known_trip_count`` (XLA
+    annotates scan loops), so scan-stacked layers are counted fully —
+    ``compiled.cost_analysis()`` does NOT do this, which is why we parse.
+  * bytes are counted only for top-level ops of non-fused computations
+    (entry / loop bodies / called computations): operands + results, i.e.
+    the HBM traffic of each fused kernel launch — fusion-internal
+    intermediates stay in registers/VMEM exactly like on real hardware.
+  * FLOPs of dots are counted wherever they appear (including inside
+    fusions), 2*M*N*K from the dot's shapes.
+  * collective bytes are attributed per opcode (all-reduce counted 2x for
+    the reduce+broadcast round trip).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*{")
+_TRIP_RE = re.compile(r'known_trip_count\D*(\d+)')
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations)="
+    r"(\{[^}]*\}|%?[\w.\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # operands + attrs + metadata
+    op_name: str = ""
+
+    @property
+    def out_bytes(self) -> int:
+        return shape_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class ClassCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+
+    def add(self, other: "ClassCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+
+
+@dataclasses.dataclass
+class OpCensus:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    per_class: Dict[str, ClassCost] = dataclasses.field(
+        default_factory=lambda: defaultdict(ClassCost))
+    per_collective: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def arithmetic_intensity(self, cls: Optional[str] = None) -> float:
+        c = self.per_class[cls] if cls else self
+        return c.flops / max(c.bytes, 1.0)
+
+
+# op_name substring -> kernel class (mirrors the paper's Fig. 6 kernel split)
+_CLASS_RULES = (
+    ("attn_core", "attention"),
+    ("kv_update", "attention"),
+    ("cross_attn", "attention"),
+    ("qkv_proj", "matmul"),
+    ("attn_out", "matmul"),
+    ("mlp", "matmul"),
+    ("expert_ffn", "matmul"),
+    ("router", "moe_dispatch"),
+    ("moe_", "moe_dispatch"),
+    ("ssd_", "ssm"),
+    ("ssm_", "ssm"),
+    ("embed", "head"),
+    ("logits", "head"),
+    ("loss", "head"),
+)
+
+
+def classify(op_name: str) -> str:
+    for pat, cls in _CLASS_RULES:
+        if pat in op_name:
+            return cls
+    return "other"
+
+
+def parse_computations(hlo_text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and "->" in line:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}" or line.strip().startswith("} //"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, tstr, opcode, rest = m.groups()
+            opn = _OPNAME_RE.search(rest)
+            comps[cur].append(Instr(name, tstr, opcode, rest,
+                                    opn.group(1) if opn else ""))
+    return comps
+
+
+class HloCensus:
+    """Builds an OpCensus from optimized HLO text."""
+
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        em = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+        self._entry = em.group(1) if em else None
+        # symbol tables: comp -> {instr name -> type str}
+        self.symbols: Dict[str, Dict[str, str]] = {}
+        for cname, instrs in self.comps.items():
+            tab = {i.name: i.type_str for i in instrs}
+            self.symbols[cname] = tab
+        # computations that are fusion bodies / reduce appliers: their ops
+        # don't touch HBM individually.
+        self.fused: set = set()
+        for instrs in self.comps.values():
+            for i in instrs:
+                if i.opcode in ("fusion", "reduce", "scatter", "sort", "map",
+                                "reduce-window", "select-and-scatter",
+                                "all-reduce", "reduce-scatter"):
+                    for grp in _CALLED_RE.findall(i.rest):
+                        for c in grp.strip("{}").split(","):
+                            self.fused.add(c.strip().lstrip("%"))
+        self._memo: Dict[str, ClassCost] = {}
+        self._memo_census: Dict[str, OpCensus] = {}
+
+    # -------------------------------------------------------------------
+    def _operand_types(self, comp: str, instr: Instr) -> List[str]:
+        """Types of the instruction's operands (best-effort text parse)."""
+        # operand list is the prefix of `rest` up to the closing paren at
+        # depth 0; operands are %names (types looked up) or literals.
+        tab = self.symbols.get(comp, {})
+        depth, args, cur = 1, [], []
+        for ch in instr.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if ch == "," and depth == 1:
+                args.append("".join(cur))
+                cur = []
+            else:
+                cur.append(ch)
+        args.append("".join(cur))
+        types = []
+        for a in args:
+            a = a.strip()
+            m = re.match(r"%?([\w.\-]+)", a)
+            if m and m.group(1) in tab:
+                types.append(tab[m.group(1)])
+        return types
+
+    def _dot_flops(self, comp: str, instr: Instr) -> float:
+        out_dims = _shape_dims(instr.type_str)
+        ops = self._operand_types(comp, instr)
+        if not ops:
+            return 0.0
+        lhs_dims = _shape_dims(ops[0])
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+        contract = 1
+        if m and m.group(1):
+            for d in m.group(1).split(","):
+                contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+        out_n = 1
+        for d in out_dims:
+            out_n *= d
+        return 2.0 * out_n * contract
+
+    _EW_FLOP_OPS = {
+        "add", "subtract", "multiply", "divide", "maximum", "minimum",
+        "exponential", "exponential-minus-one", "log", "rsqrt", "sqrt",
+        "tanh", "power", "negate", "abs", "compare", "select", "floor",
+        "and", "or", "xor", "convert", "logistic", "cosine", "sine",
+    }
+
+    def _instr_cost(self, comp: str, instr: Instr, census: OpCensus,
+                    mult: float, top_level: bool):
+        cls = classify(instr.op_name)
+        cc = census.per_class[cls]
+        flops = 0.0
+        if instr.opcode == "dot":
+            flops = self._dot_flops(comp, instr)
+        elif instr.opcode == "convolution":
+            flops = 2.0 * max(shape_bytes(instr.type_str), 1)  # coarse
+        elif instr.opcode in self._EW_FLOP_OPS:
+            dims = _shape_dims(instr.type_str)
+            n = 1
+            for d in dims:
+                n *= d
+            flops = float(n)
+        if flops:
+            census.flops += flops * mult
+            cc.flops += flops * mult
+
+        if top_level and instr.opcode not in (
+                "parameter", "constant", "tuple", "get-tuple-element",
+                "while", "bitcast", "after-all"):
+            b = self._instr_bytes(comp, instr)
+            census.bytes += b * mult
+            cc.bytes += b * mult
+
+        if instr.opcode in COLLECTIVES or any(
+                instr.opcode.startswith(c + "-start") for c in COLLECTIVES):
+            base = next((c for c in COLLECTIVES if instr.opcode.startswith(c)), None)
+            if base and not instr.opcode.endswith("-done"):
+                payload = max(instr.out_bytes,
+                              sum(shape_bytes(t)
+                                  for t in self._operand_types(comp, instr)))
+                factor = 2.0 if base in ("all-reduce",) else 1.0
+                census.coll_bytes += payload * factor * mult
+                cc.coll_bytes += payload * factor * mult
+                census.per_collective[base] += payload * factor * mult
+
+    def _instr_bytes(self, comp: str, instr: Instr) -> float:
+        """HBM bytes of one kernel launch.
+
+        In-place and sparse-access ops are special-cased the way real
+        hardware behaves: a dynamic-update-slice touches only the updated
+        row (the cache buffer is aliased, not re-written), a gather /
+        dynamic-slice reads only the selected rows — without this the KV
+        cache would be double-counted on every decode step.
+        """
+        op = instr.opcode
+        out_b = instr.out_bytes
+        ops_t = self._operand_types(comp, instr)
+        if op in ("dynamic-slice", "gather"):
+            return 2.0 * out_b
+        if op == "dynamic-update-slice":
+            upd = shape_bytes(ops_t[1]) if len(ops_t) > 1 else out_b
+            return 2.0 * upd
+        if op in ("scatter",):
+            non_aliased = [shape_bytes(t) for t in ops_t[1:]]
+            return 2.0 * sum(non_aliased)
+        if op == "fusion":
+            inner_ops = {i.opcode for c in self._called(instr)
+                         for i in self.comps.get(c, [])}
+            if "dynamic-update-slice" in inner_ops or "scatter" in inner_ops:
+                # aliased in-place update: buffer-sized operands (the
+                # aliased output and any dtype-converted twin XLA hoisted)
+                # are sliced/aliased, not streamed; traffic ~= 2x the small
+                # (update-sized) operands.
+                small = [shape_bytes(t) for t in ops_t
+                         if shape_bytes(t) < 0.5 * out_b]
+                return 2.0 * sum(small)
+            if "dynamic-slice" in inner_ops or "gather" in inner_ops:
+                small = [shape_bytes(t) for t in ops_t
+                         if shape_bytes(t) <= 4 * out_b]
+                return float(out_b + sum(small))
+        return float(out_b + sum(shape_bytes(t) for t in ops_t))
+
+    def _called(self, instr: Instr) -> List[str]:
+        out = []
+        for grp in _CALLED_RE.findall(instr.rest):
+            for c in grp.strip("{}").split(","):
+                name = c.strip().lstrip("%")
+                if name in self.comps:
+                    out.append(name)
+        return out
+
+    def comp_census(self, comp: str, census: OpCensus, mult: float):
+        top = comp not in self.fused
+        for instr in self.comps.get(comp, []):
+            self._instr_cost(comp, instr, census, mult, top_level=top)
+            if instr.opcode == "while":
+                trip_m = _TRIP_RE.search(instr.rest)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                for c in self._called(instr):
+                    self.comp_census(c, census, mult * trip)
+            elif instr.opcode in ("fusion", "call", "conditional",
+                                  "async-start", "custom-call"):
+                for c in self._called(instr):
+                    self.comp_census(c, census, mult)
+            # reduce/scatter appliers are per-element; negligible.
+
+    def entry_name(self) -> str:
+        if getattr(self, "_entry", None):
+            return self._entry
+        for name in self.comps:
+            if name.startswith("main") or ".main" in name:
+                return name
+        return next(iter(self.comps))
+
+    def census(self) -> OpCensus:
+        c = OpCensus()
+        self.comp_census(self.entry_name(), c, 1.0)
+        c.per_class = dict(c.per_class)
+        c.per_collective = dict(c.per_collective)
+        return c
+
+
+def census_from_compiled(compiled) -> OpCensus:
+    return HloCensus(compiled.as_text()).census()
+
+
+def cpu_upcast_artifact_bytes(hlo_text: str, min_bytes: int = 1 << 26
+                              ) -> float:
+    """Bytes of f32 twins XLA:CPU materializes for bf16 dot operands.
+
+    The CPU backend has no native bf16 FMA, so it hoists whole-tensor
+    bf16->f32 converts (of weights / KV caches) out of loops. TPUs execute
+    bf16 dots natively, so these buffers don't exist on the target — we
+    quantify them and report an adjusted per-chip peak alongside the raw
+    one. Counted: top-level f32 outputs of convert ops / pure convert
+    fusions above ``min_bytes`` whose operand is bf16 at half the size.
+    """
+    h = HloCensus(hlo_text)
+    total = 0.0
+    for cname, instrs in h.comps.items():
+        if cname in h.fused:
+            continue
+        for i in instrs:
+            if not i.type_str.startswith("f32"):
+                continue
+            out_b = i.out_bytes
+            if out_b < min_bytes:
+                continue
+            is_convert = i.opcode == "convert"
+            if i.opcode == "fusion":
+                inner = [x.opcode for c in h._called(i)
+                         for x in h.comps.get(c, [])
+                         if x.opcode not in ("parameter", "bitcast")]
+                is_convert = inner and all(o in ("convert", "copy",
+                                                 "transpose") for o in inner)
+            if not is_convert:
+                continue
+            ops = h._operand_types(cname, i)
+            if any(t.startswith("bf16") and shape_bytes(t) * 2 == out_b
+                   for t in ops):
+                total += out_b
+    return total
+
+
+def memory_from_compiled(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "peak_bytes": float(ma.argument_size_in_bytes +
+                            ma.temp_size_in_bytes),
+    }

@@ -1,0 +1,91 @@
+"""Batching Configuration Advisor — the paper's Eq. (2).
+
+    B_opt = argmax_B T(B)
+    s.t.  L(B) <= SLO
+          T(B) / (B * T(1)) > eps
+
+Works on *measured* curves (from the serving engine benchmark loop) or on
+*modeled* curves (core.perfmodel). Also quantifies the memory the choice
+frees versus MAX allocation — the input to the replication planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.perfmodel import ServingCurves
+
+
+@dataclasses.dataclass
+class BCAResult:
+    b_opt: int
+    throughput: float
+    itl_s: float
+    kv_fraction: float                 # KV used at B_opt / full KV capacity
+    throughput_at_max: float
+    kv_fraction_at_max: float
+    slo_s: float
+    eps: float
+
+    @property
+    def throughput_retained(self) -> float:
+        return self.throughput / max(self.throughput_at_max, 1e-12)
+
+    @property
+    def kv_freed_fraction(self) -> float:
+        return max(0.0, self.kv_fraction_at_max - self.kv_fraction)
+
+    def summary(self) -> str:
+        return (f"B_opt={self.b_opt}  T={self.throughput:.1f} tok/s "
+                f"({self.throughput_retained*100:.1f}% of MAX)  "
+                f"ITL={self.itl_s*1e3:.2f} ms  KV={self.kv_fraction*100:.1f}% "
+                f"(MAX uses {self.kv_fraction_at_max*100:.1f}%)")
+
+
+class BatchingConfigurationAdvisor:
+    def __init__(self, curves: ServingCurves, *, slo_s: float,
+                 eps: float = 0.1):
+        self.curves = curves
+        self.slo_s = slo_s
+        self.eps = eps
+
+    def solve(self) -> BCAResult:
+        c = self.curves
+        t1 = float(c.throughput[np.argmin(c.batches)])
+        feasible = np.ones(len(c.batches), bool)
+        feasible &= c.itl_s <= self.slo_s
+        # marginal scaling efficiency vs ideal linear scaling T(1)*B
+        eff = c.throughput / np.maximum(c.batches * t1, 1e-12)
+        feasible &= eff > self.eps
+        if not feasible.any():
+            idx = int(np.argmin(c.itl_s))
+        else:
+            masked = np.where(feasible, c.throughput, -np.inf)
+            idx = int(np.argmax(masked))
+        imax = int(np.argmax(c.batches))
+        return BCAResult(
+            b_opt=int(c.batches[idx]),
+            throughput=float(c.throughput[idx]),
+            itl_s=float(c.itl_s[idx]),
+            kv_fraction=float(c.kv_fraction[idx]),
+            throughput_at_max=float(c.throughput[imax]),
+            kv_fraction_at_max=float(c.kv_fraction[imax]),
+            slo_s=self.slo_s, eps=self.eps)
+
+
+def slo_from_reference(curves: ServingCurves, ref_batch: int = 32,
+                       factor: float = 2.0) -> float:
+    """The paper's SLO convention: factor x the ITL observed at batch 32
+    (strict=2x, relaxed=4x)."""
+    idx = int(np.argmin(np.abs(curves.batches - ref_batch)))
+    return float(curves.itl_s[idx]) * factor
+
+
+def knee_point(curves: ServingCurves, eps: float = 0.1) -> int:
+    """Largest batch whose marginal efficiency still exceeds eps."""
+    t1 = float(curves.throughput[np.argmin(curves.batches)])
+    eff = curves.throughput / np.maximum(curves.batches * t1, 1e-12)
+    ok = curves.batches[eff > eps]
+    return int(ok.max()) if len(ok) else int(curves.batches.min())

@@ -1,0 +1,52 @@
+"""Hardware descriptions for roofline analysis.
+
+TPU v5e is the deployment target (constants from the assignment);
+the H100 entry carries the paper's own roofline constants (Table II /
+Fig. 1) and is used to reproduce the paper's measured numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # FLOP/s per chip (matmul dtype of interest)
+    hbm_bw: float              # bytes/s per chip
+    link_bw: float             # bytes/s per ICI/NVLink link
+    hbm_bytes: float           # HBM capacity per chip
+    vmem_bytes: float = 0.0    # on-chip scratch (VMEM / SMEM+L2 analogue)
+    host_link_bw: float = 0.0  # PCIe/DCN-ish, for host-gap modeling
+    # roofline ceilings as *plotted by the paper* (Fig. 1 / Table II use the
+    # single-precision CUDA-core ceiling for the attention kernels).
+    plot_flops_ceiling: float = 0.0
+    plot_bw_ceiling: float = 0.0
+
+
+TPU_V5E = Hardware(
+    name="tpu-v5e",
+    peak_flops=197e12,         # bf16
+    hbm_bw=819e9,
+    link_bw=50e9,              # per ICI link (assignment constant)
+    hbm_bytes=16e9,
+    vmem_bytes=128 * 2**20,
+)
+
+# The paper's H100 (64GB HBM2 variant). hbm_bw is the DRAM roofline ceiling
+# the paper reports in Table II (1.63e12 B/s); peak_flops is the tensor-core
+# bf16 rate (matmuls); plot_* carry the paper's Fig. 1 / Table II plotted
+# ceilings (single-precision CUDA-core roofline, 2.56e13 FLOP/s) so our
+# reproduced roofline figures are directly comparable.
+H100_PAPER = Hardware(
+    name="h100-paper",
+    peak_flops=9.9e14,
+    hbm_bw=1.63e12,
+    link_bw=450e9,
+    hbm_bytes=64e9,
+    vmem_bytes=50 * 2**20,
+    plot_flops_ceiling=2.56e13,
+    plot_bw_ceiling=1.63e12,
+)
+
+HARDWARE = {h.name: h for h in (TPU_V5E, H100_PAPER)}

@@ -1,0 +1,79 @@
+"""Model replication planner — the paper's Section VI-B, adapted to TPU.
+
+On the H100 the paper co-locates replicas with NVIDIA MPS (kernel-level
+time sharing). TPUs do not time-share kernels across processes, so the
+TPU-idiomatic equivalent is *spatial* replication: slice the device mesh
+into R disjoint sub-meshes, one independent model replica per slice, and
+shard incoming requests across replicas. On a single chip (paper setting)
+the same planner degenerates to memory-budgeted co-location whose timing
+behaviour is reproduced by ``core.simulator``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.hardware import Hardware
+
+
+@dataclasses.dataclass
+class ReplicationPlan:
+    n_replicas: int
+    per_replica_batch: int
+    model_bytes: float
+    kv_bytes_per_replica: float
+    total_bytes: float
+    capacity_bytes: float
+
+    def summary(self) -> str:
+        return (f"{self.n_replicas} replicas x B={self.per_replica_batch}: "
+                f"{self.total_bytes/1e9:.1f} / {self.capacity_bytes/1e9:.1f} GB")
+
+
+class ReplicationPlanner:
+    """How many replicas fit once BCA trims the KV allocation?"""
+
+    def __init__(self, hw: Hardware, cfg: ArchConfig, *, ctx: int,
+                 dtype_bytes: int = 2, reserve_fraction: float = 0.1):
+        self.hw = hw
+        self.cfg = cfg
+        self.ctx = ctx
+        self.dtype_bytes = dtype_bytes
+        self.reserve = reserve_fraction
+
+    def plan(self, b_opt: int, max_replicas: Optional[int] = None
+             ) -> ReplicationPlan:
+        model_b = self.cfg.num_params() * self.dtype_bytes
+        kv_b = self.cfg.kv_bytes_per_token(self.dtype_bytes) * self.ctx * b_opt
+        cap = self.hw.hbm_bytes * (1 - self.reserve)
+        per_replica = model_b + kv_b
+        n = max(1, int(cap // per_replica))
+        if max_replicas:
+            n = min(n, max_replicas)
+        return ReplicationPlan(
+            n_replicas=n, per_replica_batch=b_opt, model_bytes=model_b,
+            kv_bytes_per_replica=kv_b, total_bytes=n * per_replica,
+            capacity_bytes=cap)
+
+
+def slice_mesh(mesh, n_replicas: int):
+    """Split a mesh into ``n_replicas`` disjoint sub-meshes along the
+    leading data axis (TPU-native spatial replication).
+
+    Returns a list of ``jax.sharding.Mesh``; raises if the data axis is not
+    divisible by the replica count.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    axis = mesh.axis_names[0]
+    size = mesh.shape[axis]
+    if size % n_replicas:
+        raise ValueError(f"data axis {size} not divisible by {n_replicas}")
+    devs = np.asarray(mesh.devices)
+    chunks = np.split(devs, n_replicas, axis=0)
+    return [Mesh(c, mesh.axis_names) for c in chunks]

@@ -1,0 +1,35 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+so the same call sites work in tests and in deployment.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention import gqa_decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decode_attention(q, k, v, lengths, *, block_s: int = 256,
+                     interpret: Optional[bool] = None):
+    """GQA decode attention. q:[B,H,hd], k/v:[B,S,K,hd], lengths:[B]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _decode(q, k, v, lengths, block_s=block_s, interpret=interpret)
+
+
+def prefill_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None, block_q: int = 128,
+                      block_s: int = 128, interpret: Optional[bool] = None):
+    """Tiled prefill attention. q:[B,Sq,H,hd], k/v:[B,Skv,K,hd]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_s=block_s, interpret=interpret)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: PAGED GQA decode attention.
+
+vLLM's PagedAttention follows KV block pointers inside the CUDA kernel;
+the TPU-native equivalent drives the HBM->VMEM tile fetch through a
+*block table* consumed by the BlockSpec index_map (scalar-prefetch
+operand). The physical KV pool never gets materialized per request — each
+grid step pulls exactly one request's next block from wherever it lives
+in the pool.
+
+Layout:
+    k_pool/v_pool: [NB, BS, K, hd]   physical blocks
+    block_table:   [B, nb_max] int32 physical block id per logical block
+    lengths:       [B] int32         valid tokens per request
+
+Grid: (B, K, nb_max) with the block axis innermost/sequential; online
+softmax state carried in VMEM scratch exactly like the contiguous kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, block_s: int, scale: float):
+    b, kh, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    # tokens covered by this logical block: [i*BS, i*BS+BS)
+    @pl.when(i * block_s < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # [G, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [BS, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ids = i * block_s + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (1, block_s), 1)
+        s = jnp.where(ids < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gqa_decode_attention(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_table: jax.Array,
+                               lengths: jax.Array, *,
+                               interpret: bool = False) -> jax.Array:
+    """q: [B,H,hd]; k/v_pool: [NB,BS,K,hd]; block_table: [B,nb] int32;
+    lengths: [B] int32 -> [B,H,hd]."""
+    B, H, hd = q.shape
+    NB, BS, K, _ = k_pool.shape
+    nb = block_table.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+
+    grid = (B, K, nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, kh, i, tbl, ln: (b, kh, 0, 0)),
+            pl.BlockSpec((1, BS, 1, hd),
+                         lambda b, kh, i, tbl, ln: (tbl[b, i], 0, kh, 0)),
+            pl.BlockSpec((1, BS, 1, hd),
+                         lambda b, kh, i, tbl, ln: (tbl[b, i], 0, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, kh, i, tbl, ln: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, block_s=BS, scale=hd ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32), qg,
+      k_pool, v_pool)
+    return out.reshape(B, H, hd)

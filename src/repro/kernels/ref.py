@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas attention kernels.
+
+These are the ground truth for tests/test_kernels.py (interpret=True
+comparisons) and deliberately use the naive O(S^2) formulation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def gqa_decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                             lengths: jax.Array) -> jax.Array:
+    """Decode attention oracle.
+
+    q: [B, H, hd] — one query per sequence;
+    k/v: [B, S, K, hd] KV cache (K kv-heads, H = K*G);
+    lengths: [B] int32 — valid cache length per sequence.
+    Returns [B, H, hd] (f32).
+    """
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, kf) * (hd ** -0.5)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]          # [B,S]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, vf)
+    return o.reshape(B, H, hd)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """Prefill attention oracle.
+
+    q: [B, Sq, H, hd]; k/v: [B, S, K, hd]. Returns [B, Sq, H, hd] (f32).
+    """
+    B, Sq, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qg, k.astype(jnp.float32)) * (hd ** -0.5)
+    q_ids = jnp.arange(Sq)[:, None]
+    kv_ids = jnp.arange(S)[None, :]
+    mask = jnp.ones((Sq, S), bool)
+    if causal:
+        mask &= q_ids >= kv_ids
+    if window is not None:
+        mask &= q_ids - kv_ids < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd)

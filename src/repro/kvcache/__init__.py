@@ -1,0 +1,1 @@
+from repro.kvcache.paged import BlockManager, PagedKVCache  # noqa

@@ -1,0 +1,201 @@
+"""Paged KV cache (vLLM's PagedAttention, TPU-adapted).
+
+vLLM pages the KV cache with CUDA pointer chasing inside the attention
+kernel. TPUs have no in-kernel pointer chasing, so the TPU-native analogue
+is a *block-table gather*: physical KV blocks live in a pool tensor and a
+per-request block table drives a gather that materializes the request's
+logical view. Memory accounting (the thing BCA cares about) is identical
+to vLLM's: allocation at block granularity, a free list, and admission
+control by free-block watermark.
+
+The pool is generic over the model-cache pytree: attention K/V leaves
+(which carry a ``kv_seq`` logical axis) are paged; SSM state / cross-attn
+leaves are per-slot dense state (they are O(1) in sequence length, there
+is nothing to page).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.models.params import ParamSpec
+from repro.sharding import KV_SEQ
+
+
+class BlockManager:
+    """Free-list block allocator with a vLLM-style watermark."""
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 watermark: float = 0.01):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.free: List[int] = list(range(num_blocks))
+        self.tables: Dict[int, List[int]] = {}
+        self.watermark_blocks = max(1, int(num_blocks * watermark))
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return (len(self.free) - self.blocks_needed(n_tokens)
+                >= self.watermark_blocks)
+
+    def allocate(self, req_id: int, n_tokens: int) -> List[int]:
+        need = self.blocks_needed(n_tokens)
+        if need > len(self.free):
+            raise RuntimeError("KV pool exhausted")
+        got = [self.free.pop() for _ in range(need)]
+        self.tables.setdefault(req_id, []).extend(got)
+        return got
+
+    def append_token(self, req_id: int, new_len: int) -> Optional[int]:
+        """Ensure capacity for new_len tokens; returns a new block or None."""
+        have = len(self.tables.get(req_id, ())) * self.block_size
+        if new_len > have:
+            return self.allocate(req_id, new_len - have)[0]
+        return None
+
+    def release(self, req_id: int):
+        self.free.extend(self.tables.pop(req_id, []))
+
+    @property
+    def used_fraction(self) -> float:
+        return 1.0 - len(self.free) / self.num_blocks
+
+
+def _is_kv_leaf(spec: ParamSpec) -> bool:
+    return KV_SEQ in spec.logical
+
+
+class PagedKVCache:
+    """Physical paged pool mirroring a model cache pytree."""
+
+    def __init__(self, cfg: ArchConfig, *, num_blocks: int, block_size: int,
+                 max_batch: int):
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_batch = max_batch
+        self.manager = BlockManager(num_blocks, block_size)
+        # template with batch=1, kv_len=block_size gives per-leaf shapes
+        template = model_lib.abstract_cache(cfg, 1, block_size)
+        is_spec = lambda x: isinstance(x, ParamSpec)
+        self._is_kv = jax.tree.map(_is_kv_leaf, template, is_leaf=is_spec)
+        # batch-dim index per leaf: 1 when the leaf is layer-stacked
+        self._bdim = jax.tree.map(
+            lambda sp: 1 if sp.logical and sp.logical[0] == "layers" else 0,
+            template, is_leaf=is_spec)
+
+        def mk(spec: ParamSpec, is_kv: bool, bdim: int):
+            shape = list(spec.shape)
+            shape[bdim] = num_blocks if is_kv else max_batch
+            return jnp.zeros(tuple(shape), spec.dtype)
+
+        self.pool = jax.tree.map(mk, template, self._is_kv, self._bdim,
+                                 is_leaf=is_spec)
+
+    # ------------------------------------------------------------------
+    def gather(self, req_ids: Sequence[int], pad_blocks: int):
+        """Materialize the logical cache view [B, S_pad, ...] for req_ids."""
+        B = len(req_ids)
+        table = np.zeros((B, pad_blocks), np.int32)
+        for i, rid in enumerate(req_ids):
+            blocks = self.manager.tables.get(rid, [])
+            table[i, :len(blocks)] = blocks[:pad_blocks]
+        tbl = jnp.asarray(table)
+        slots = jnp.asarray([self._slot(rid) for rid in req_ids])
+
+        def g(pool, is_kv, bdim):
+            if is_kv:
+                if bdim == 1:        # [L, NB, BS, K, hd]
+                    v = pool[:, tbl]                      # [L,B,nb,BS,K,hd]
+                    L = v.shape[0]
+                    return v.reshape(L, B, pad_blocks * self.block_size,
+                                     *v.shape[4:])
+                v = pool[tbl]                             # [B,nb,BS,K,hd]
+                return v.reshape(B, pad_blocks * self.block_size,
+                                 *v.shape[3:])
+            return jnp.take(pool, slots, axis=bdim)
+
+        return jax.tree.map(g, self.pool, self._is_kv, self._bdim)
+
+    def scatter_new_token(self, req_ids: Sequence[int],
+                          positions: Sequence[int], new_cache):
+        """Write each request's new KV row (at its position) + state back."""
+        B = len(req_ids)
+        phys = np.zeros((B,), np.int32)
+        slot_in_block = np.zeros((B,), np.int32)
+        for i, (rid, pos) in enumerate(zip(req_ids, positions)):
+            blocks = self.manager.tables[rid]
+            phys[i] = blocks[pos // self.block_size]
+            slot_in_block[i] = pos % self.block_size
+        phys_j = jnp.asarray(phys)
+        sib_j = jnp.asarray(slot_in_block)
+        pos_j = jnp.asarray(np.asarray(positions, np.int32))
+        slots = jnp.asarray([self._slot(rid) for rid in req_ids])
+        barange = jnp.arange(B)
+
+        def s(pool, view, is_kv, bdim):
+            if is_kv:
+                if bdim == 1:
+                    row = view[:, barange, pos_j]          # [L,B,K,hd]
+                    return pool.at[:, phys_j, sib_j].set(row)
+                row = view[barange, pos_j]
+                return pool.at[phys_j, sib_j].set(row)
+            if bdim == 1:
+                return pool.at[:, slots].set(view)
+            return pool.at[slots].set(view)
+
+        self.pool = jax.tree.map(s, self.pool, new_cache, self._is_kv,
+                                 self._bdim)
+
+    def write_prefill(self, req_id: int, cache_one):
+        """Store a single request's prefill cache (batch dim == 1)."""
+        blocks = self.manager.tables[req_id]
+        nb = len(blocks)
+        S_cap = nb * self.block_size
+        phys = jnp.asarray(blocks)
+        slot = self._slot(req_id)
+
+        def w(pool, view, is_kv, bdim):
+            if is_kv:
+                if bdim == 1:
+                    v = view[:, 0]                        # [L,S,K,hd]
+                    S = min(v.shape[1], S_cap)
+                    pad = S_cap - S
+                    v = jnp.pad(v[:, :S], ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    v = v.reshape(v.shape[0], nb, self.block_size,
+                                  *v.shape[2:])
+                    return pool.at[:, phys].set(v)
+                v = view[0]
+                S = min(v.shape[0], S_cap)
+                pad = S_cap - S
+                v = jnp.pad(v[:S], ((0, pad), (0, 0), (0, 0)))
+                v = v.reshape(nb, self.block_size, *v.shape[1:])
+                return pool.at[phys].set(v)
+            if bdim == 1:
+                return pool.at[:, slot].set(view[:, 0])
+            return pool.at[slot].set(view[0])
+
+        self.pool = jax.tree.map(w, self.pool, cache_one, self._is_kv,
+                                 self._bdim)
+
+    # slot assignment for dense (non-paged) state leaves
+    def _slot(self, rid: int) -> int:
+        if not hasattr(self, "_slots"):
+            self._slots: Dict[int, int] = {}
+            self._free_slots = list(range(self.max_batch))
+        if rid not in self._slots:
+            self._slots[rid] = self._free_slots.pop()
+        return self._slots[rid]
+
+    def release(self, rid: int):
+        self.manager.release(rid)
+        if hasattr(self, "_slots") and rid in self._slots:
+            self._free_slots.append(self._slots.pop(rid))

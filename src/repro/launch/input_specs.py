@@ -1,0 +1,296 @@
+"""Per-(architecture x input-shape) dry-run case construction.
+
+``build_case`` returns everything the dry-run needs: the step function,
+ShapeDtypeStruct stand-ins for every input (weak-type-correct, shardable,
+no device allocation), and in/out shardings. It also applies the
+shape-dependent config adjustments:
+
+  * ``long_500k`` on dense/VLM archs switches self-attention to the
+    sliding-window variant (window 8192) — the sub-quadratic option;
+    SSM/hybrid archs run it natively.
+  * ``q_block`` is tuned per shape so the blocked-attention working set
+    stays within per-chip memory at 32k sequence.
+  * encoder-only archs (hubert) have no decode step: decode shapes raise
+    ``SkipCase`` (documented skip), and "prefill" is the encoder forward.
+
+Sharding-policy decisions (recorded in DESIGN.md):
+  * ``shard_kv_seq``: when kv_heads doesn't divide the model axis, the KV
+    cache shards its *sequence* dim on the model axis instead (context
+    parallelism) — this is what lets kv=2 (qwen) and kv=8 (deepseek,
+    llama-90b, arctic, internlm2) decode at 32k without replicating the
+    cache 16x.
+  * ``fsdp``: training always shards weights/optimizer over the data axes
+    (ZeRO-3); serving enables it only when the bf16 weights exceed ~half
+    an HBM per chip under pure tensor parallelism (llama-90b, arctic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.models.params import tree_sds, tree_shardings
+from repro.sharding import ShardingRules, rules_for
+from repro.training.optimizer import AdamWConfig
+from repro.training.train import make_train_step, opt_state_sds, opt_state_shardings
+from repro.core.hardware import TPU_V5E
+
+
+class SkipCase(Exception):
+    """This (arch x shape) pair is documented as not applicable."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+SLIDING_WINDOW_LONG = 8192
+
+
+@dataclasses.dataclass
+class DryRunCase:
+    arch: str
+    shape: ShapeSpec
+    cfg: ArchConfig
+    rules: ShardingRules
+    fn: Callable
+    args_sds: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+    model_flops: float = 0.0
+    hbm_budget_bytes: float = TPU_V5E.hbm_bytes
+
+
+def _needs_kv_seq_shard(cfg: ArchConfig, model_size: int) -> bool:
+    return cfg.n_kv_heads % model_size != 0
+
+
+def _needs_fsdp_serve(cfg: ArchConfig, model_size: int) -> bool:
+    return cfg.num_params() * 2 / model_size > TPU_V5E.hbm_bytes * 0.5
+
+
+def _auto_qblock(cfg: ArchConfig, shape: "ShapeSpec", data_shards: int,
+                 budget_bytes: float = 1.0e9, kv_tile: int = 1024) -> int:
+    """Largest power-of-two query block whose f32 score tile
+    [B/dp, qb, H, kv_tile] fits the per-chip budget (flash inner loop
+    bounds the KV extent of a tile to kv_tile)."""
+    b_loc = max(1, shape.batch // data_shards)
+    per_row = b_loc * cfg.n_heads * min(shape.seq, kv_tile) * 4
+    qb = int(budget_bytes // max(per_row, 1))
+    qb = max(16, min(512, 1 << max(qb.bit_length() - 1, 4)))
+    return qb
+
+
+def adjusted_cfg(arch: str, shape: ShapeSpec, data_shards: int = 16
+                 ) -> ArchConfig:
+    cfg = get_config(arch)
+    changes: Dict[str, Any] = {}
+    if shape.name == "long_500k" and cfg.arch_type in ("dense", "vlm"):
+        changes["sliding_window"] = SLIDING_WINDOW_LONG
+    if shape.kind in ("prefill", "train"):
+        seq = shape.seq if not (shape.name == "long_500k"
+                                and cfg.arch_type in ("dense", "vlm")) \
+            else SLIDING_WINDOW_LONG
+        eff = dataclasses.replace(cfg, sliding_window=None)
+        changes["q_block"] = _auto_qblock(eff, shape, data_shards)
+    if shape.name == "long_500k" and cfg.arch_type == "hybrid":
+        # full-attention hybrid blocks at 500k context: small query tiles
+        changes["q_block"] = 128
+    if changes:
+        cfg = dataclasses.replace(cfg, **changes)
+    return cfg
+
+
+def _batch_sds(cfg: ArchConfig, batch: int, seq: int, train: bool):
+    b: Dict[str, jax.ShapeDtypeStruct] = {}
+    spec: Dict[str, P] = {}
+    dp = P("data")  # expanded to ("pod","data") below when multipod
+    if cfg.embedding_inputs:
+        b["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                           jnp.bfloat16)
+        spec["embeds"] = P("batch_", None, None)
+    else:
+        b["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        spec["tokens"] = P("batch_", None)
+    if train:
+        b["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        spec["labels"] = P("batch_", None)
+    if cfg.arch_type == "vlm":
+        b["img_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        spec["img_embeds"] = P("batch_", None, None)
+    return b, spec
+
+
+def _resolve_batch_specs(spec_tree, rules: ShardingRules, batch: int):
+    """Replace the 'batch_' placeholder with the rules' batch axes (with
+    divisibility fallback, e.g. long_500k batch=1 stays replicated)."""
+    ba = rules.batch_axes if batch % rules.axis_size(rules.batch_axes) == 0 \
+        else None
+
+    def fix(p):
+        return P(*[(ba if a == "batch_" else a) for a in p])
+    return jax.tree.map(fix, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+VARIANTS = ("kv_repeat", "head_pad64", "attn_row_parallel",
+            "head_pad64_kv_repeat", "attn_row_parallel_kv_seq_off",
+            "kv_repeat_act_replicated")
+
+
+def apply_variant(cfg: ArchConfig, variant: Optional[str]) -> ArchConfig:
+    """§Perf hillclimb variants (see EXPERIMENTS.md §Perf)."""
+    if not variant:
+        return cfg
+    if variant == "kv_repeat":
+        return dataclasses.replace(cfg, attn_kv_repeat=True)
+    if variant == "head_pad64":
+        assert cfg.n_heads == 56, "head padding variant targets 56-head archs"
+        return dataclasses.replace(cfg, n_heads=64)
+    if variant == "head_pad64_kv_repeat":
+        assert cfg.n_heads == 56
+        return dataclasses.replace(cfg, n_heads=64, attn_kv_repeat=True)
+    if variant == "attn_row_parallel":
+        return dataclasses.replace(cfg, attn_row_parallel=True)
+    if variant == "attn_row_parallel_kv_seq_off":
+        return dataclasses.replace(cfg, attn_row_parallel=True)
+    if variant == "kv_repeat_act_replicated":
+        return dataclasses.replace(cfg, attn_kv_repeat=True)
+    raise ValueError(variant)
+
+
+def build_case(arch: str, shape_name: str, mesh,
+               *, moment_dtype: str = "float32",
+               variant: Optional[str] = None) -> DryRunCase:
+    shape = SHAPES[shape_name]
+    base = get_config(arch)
+    if base.arch_type == "encoder" and shape.kind == "decode":
+        raise SkipCase(f"{arch} is encoder-only: no autoregressive decode "
+                       f"step exists for {shape_name}")
+    model_size = mesh.shape["model"]
+    data_shards = 1
+    for name, size in mesh.shape.items():
+        if name != "model":
+            data_shards *= size
+    cfg = adjusted_cfg(arch, shape, data_shards)
+    cfg = apply_variant(cfg, variant)
+    fsdp = shape.kind == "train" or _needs_fsdp_serve(cfg, model_size)
+    # KV-seq (context-parallel) sharding only pays off when the KV cache is
+    # the dominant tensor, i.e. decode; at train/prefill it forces per-block
+    # output psums that blow up the collective term.
+    shard_kv = shape.kind == "decode" and _needs_kv_seq_shard(cfg, model_size)
+    rules = rules_for(mesh, shard_kv_seq=shard_kv, fsdp=fsdp,
+                      act_replicated=bool(variant and
+                                          "act_replicated" in variant))
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+
+    params_sds = model_lib.param_sds(cfg)
+    params_sh = model_lib.param_shardings(cfg, rules)
+    ns = lambda p: NamedSharding(mesh, p)
+
+    from repro.core.roofline import model_flops_for
+    mf = model_flops_for(cfg, shape.kind, shape.batch, shape.seq,
+                         train=(shape.kind == "train"))
+
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        # pick gradient-accumulation depth so per-layer saved activations
+        # (x carried by the layer scan) stay under ~2.5GB/chip. SSM/hybrid
+        # blocks hold ~5x wider intermediates (d_in=2d expand + conv
+        # channels + chunk states), so scale their estimate accordingly.
+        width_mult = 5 if cfg.ssm is not None else 1
+        saved_x = (cfg.n_layers * (shape.batch // data_shards) * shape.seq *
+                   max(cfg.d_model // model_size, 1) * 2 * width_mult)
+        micro = 2 if cfg.num_params() > 30e9 else 1    # big-model headroom
+        while saved_x / micro > 2.5e9 and micro < 8 and \
+                (shape.batch // data_shards) % (micro * 2) == 0:
+            micro *= 2
+        fn = make_train_step(cfg, rules, opt, microbatches=micro)
+        batch_sds, batch_spec = _batch_sds(cfg, shape.batch, shape.seq, True)
+        batch_spec = _resolve_batch_specs(batch_spec, rules, shape.batch)
+        osds = opt_state_sds(cfg)
+        if moment_dtype != "float32":
+            mdt = jnp.dtype(moment_dtype)
+            osds = (jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt),
+                                 osds[0]),
+                    jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt),
+                                 osds[1]), osds[2])
+        osh = opt_state_shardings(cfg, rules)
+        args = (params_sds, osds, batch_sds)
+        in_sh = (params_sh, osh, jax.tree.map(ns, batch_spec,
+                                              is_leaf=lambda x: isinstance(x, P)))
+        out_sh = (params_sh, osh,
+                  {"loss": ns(P()), "grad_norm": ns(P())})
+        return DryRunCase(arch, shape, cfg, rules, fn, args, in_sh, out_sh,
+                          donate=(0, 1), model_flops=mf)
+
+    if shape.kind == "prefill":
+        if cfg.arch_type == "encoder":
+            def fn(params, batch):
+                logits, aux = model_lib.forward(params, cfg, rules, batch)
+                return logits
+            batch_sds, batch_spec = _batch_sds(cfg, shape.batch, shape.seq,
+                                               False)
+            batch_spec = _resolve_batch_specs(batch_spec, rules, shape.batch)
+            args = (params_sds, batch_sds)
+            in_sh = (params_sh, jax.tree.map(
+                ns, batch_spec, is_leaf=lambda x: isinstance(x, P)))
+            out_sh = ns(rules.spec(("batch", "seq", "vocab"),
+                                   (shape.batch, shape.seq, cfg.vocab_size)))
+            return DryRunCase(arch, shape, cfg, rules, fn, args, in_sh,
+                              out_sh, model_flops=mf)
+
+        def fn(params, batch):
+            logits, cache, pos = model_lib.prefill(params, cfg, rules, batch)
+            return logits, cache
+        batch_sds, batch_spec = _batch_sds(cfg, shape.batch, shape.seq, False)
+        batch_spec = _resolve_batch_specs(batch_spec, rules, shape.batch)
+        kv_len = min(shape.seq, cfg.sliding_window or shape.seq)
+        cache_sh = model_lib.cache_shardings(cfg, rules, shape.batch, kv_len)
+        args = (params_sds, batch_sds)
+        in_sh = (params_sh, jax.tree.map(
+            ns, batch_spec, is_leaf=lambda x: isinstance(x, P)))
+        out_sh = (ns(rules.spec(("batch", "vocab"),
+                                (shape.batch, cfg.vocab_size))), cache_sh)
+        return DryRunCase(arch, shape, cfg, rules, fn, args, in_sh, out_sh,
+                          model_flops=mf)
+
+    # decode (serve_step): ONE token against a seq-long KV cache
+    kv_len = min(shape.seq, cfg.sliding_window or shape.seq)
+
+    def fn(params, cache, tokens, pos):
+        return model_lib.decode_step(params, cfg, rules, cache, tokens, pos)
+
+    cache_sds = model_lib.cache_sds(cfg, shape.batch, kv_len)
+    cache_sh = model_lib.cache_shardings(cfg, rules, shape.batch, kv_len)
+    tok_sds = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
+    tok_sh = ns(rules.spec(("batch",), (shape.batch,)))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (params_sds, cache_sds, tok_sds, pos_sds)
+    in_sh = (params_sh, cache_sh, tok_sh, ns(P()))
+    out_sh = (ns(rules.spec(("batch", "vocab"),
+                            (shape.batch, cfg.vocab_size))), cache_sh)
+    return DryRunCase(arch, shape, cfg, rules, fn, args, in_sh, out_sh,
+                      donate=(1,), model_flops=mf)

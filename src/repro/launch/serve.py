@@ -1,0 +1,83 @@
+"""Serving launcher — wires the whole paper loop:
+
+    profile T(B)/L(B) -> BCA (Eq. 2) -> replication plan -> serve
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --arch opt-1.3b --reduced \
+      --requests 24 --bca --replicas auto
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--bca", action="store_true",
+                    help="pick max_batch via the Batching Configuration "
+                         "Advisor over modeled curves")
+    ap.add_argument("--slo-factor", type=float, default=2.0)
+    ap.add_argument("--eps", type=float, default=0.1)
+    ap.add_argument("--replicas", default="1",
+                    help="'auto' = ReplicationPlanner decides")
+    ap.add_argument("--ctx", type=int, default=331)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.core import (TPU_V5E, H100_PAPER, BatchingConfigurationAdvisor,
+                            ReplicationPlanner, decode_curves, max_batch_for,
+                            replication_sweep, slo_from_reference)
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.model import Model, init_params
+    from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                               sharegpt_like)
+    from repro.sharding import rules_for
+
+    full_cfg = get_config(args.arch)
+    hw = H100_PAPER if args.arch.startswith(("opt-", "llama-2")) else TPU_V5E
+
+    max_batch = args.max_batch
+    if args.bca:
+        mb = max_batch_for(full_cfg, hw, ctx=args.ctx)
+        curves = decode_curves(full_cfg, hw, ctx=args.ctx, max_batch=mb)
+        slo = slo_from_reference(curves, 32, args.slo_factor)
+        res = BatchingConfigurationAdvisor(curves, slo_s=slo,
+                                           eps=args.eps).solve()
+        print(f"[BCA] {res.summary()}")
+        max_batch = min(res.b_opt, 64) if args.reduced else res.b_opt
+
+    n_rep = None
+    if args.replicas == "auto":
+        plan = ReplicationPlanner(hw, full_cfg, ctx=args.ctx).plan(max_batch)
+        n_rep = plan.n_replicas
+        print(f"[replication] {plan.summary()}")
+        for r in replication_sweep(full_cfg, hw, batch=max_batch,
+                                   ctx=args.ctx, max_replicas=n_rep):
+            print(f"[sim] {r.summary()}")
+    else:
+        n_rep = int(args.replicas)
+
+    # real engine run (reduced config on CPU)
+    cfg = reduced(full_cfg) if args.reduced else full_cfg
+    mesh = make_test_mesh()
+    rules = rules_for(mesh)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    with jax.set_mesh(mesh):
+        ecfg = EngineConfig(max_batch=min(max_batch, 64),
+                            kv_pool_tokens=1 << 16, max_model_len=512,
+                            prefill_bucket=64)
+        engine = ContinuousBatchingEngine(model, params, ecfg)
+        reqs = sharegpt_like(args.requests, cfg.vocab_size, seed=0,
+                             mean_in=24, mean_out=32, max_len=256)
+        metrics = engine.run(reqs)
+    print(f"[engine] {metrics.row()}")
+
+
+if __name__ == "__main__":
+    main()

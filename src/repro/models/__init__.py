@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    Model, abstract_params, init_params, param_shardings, init_cache,
+    abstract_cache, cache_shardings,
+)

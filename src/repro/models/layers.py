@@ -1,0 +1,124 @@
+"""Norms, rotary embeddings, MLPs, embedding/unembedding."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import pspec
+from repro.sharding import (BATCH, D_FF, D_MODEL, SEQ, VOCAB, W_IN,
+                            ShardingRules, constrain)
+
+
+# ---------------------------------------------------------------- norms ----
+def norm_abstract(cfg: ArchConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": pspec((d,), (D_MODEL,), cfg.dtype, init="ones")}
+    if cfg.norm == "layernorm":
+        p["bias"] = pspec((d,), (D_MODEL,), cfg.dtype, init="zeros")
+    return p
+
+
+def norm_apply(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gated_rmsnorm_apply(scale, x: jax.Array, gate: jax.Array) -> jax.Array:
+    """Mamba2's gated RMSNorm: norm(x * silu(z))."""
+    xf = (x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, hd]; positions: [S] or [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over the heads dim: [..., S, 1, half]
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ mlp ----
+def mlp_abstract(cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    # Megatron column->row parallel: w1/w3 shard d_ff (output), w2 contracts
+    # over the sharded d_ff and psums — no full-width activation psum.
+    p = {
+        "w1": pspec((d, f), (W_IN, D_FF), cfg.dtype),
+        "w2": pspec((f, d), (D_FF, W_IN), cfg.dtype, fan_in=f),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = pspec((d, f), (W_IN, D_FF), cfg.dtype)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, cfg: ArchConfig, rules: ShardingRules) -> jax.Array:
+    with jax.named_scope("mlp"):
+        h = x @ p["w1"]
+        if cfg.act == "swiglu":
+            h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * (x @ p["w3"])
+        elif cfg.act == "gelu":
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        else:
+            h = jnp.maximum(h, 0)
+        h = constrain(h, rules, (BATCH, SEQ, D_FF) if h.ndim == 3 else (BATCH, D_FF))
+        return h @ p["w2"]
+
+
+# ------------------------------------------------------------ embedding ----
+def embed_abstract(cfg: ArchConfig):
+    vp = cfg.padded_vocab
+    p = {"tok": pspec((vp, cfg.d_model), (VOCAB, D_MODEL),
+                      cfg.dtype, fan_in=cfg.d_model)}
+    if cfg.pos == "learned":
+        p["pos"] = pspec((cfg.max_position, cfg.d_model), (None, D_MODEL),
+                         cfg.dtype, fan_in=cfg.d_model)
+    if not cfg.tie_embeddings:
+        # vocab (output) sharded — logits must never replicate over V
+        p["unemb"] = pspec((cfg.d_model, vp), (W_IN, VOCAB), cfg.dtype)
+    return p
+
+
+def embed_apply(p, tokens: jax.Array, positions: jax.Array,
+                cfg: ArchConfig, rules: ShardingRules) -> jax.Array:
+    with jax.named_scope("embed"):
+        x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.activation_dtype)
+        if cfg.pos == "learned":
+            x = x + jnp.take(p["pos"], positions, axis=0).astype(x.dtype)
+        ax = (BATCH, SEQ, D_MODEL) if x.ndim == 3 else (BATCH, D_MODEL)
+        return constrain(x, rules, ax)
+
+
+def unembed_apply(p, x: jax.Array, cfg: ArchConfig,
+                  rules: ShardingRules) -> jax.Array:
+    with jax.named_scope("logits"):
+        w = p["tok"].T if cfg.tie_embeddings else p["unemb"]
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            vio = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                           logits.ndim - 1)
+            logits = jnp.where(vio < cfg.vocab_size, logits, -1e30)
+        ax = (BATCH, SEQ, VOCAB) if logits.ndim == 3 else (BATCH, VOCAB)
+        # returned logits keep the PADDED vocab (slicing a sharded dim to a
+        # non-divisible width would force a reshard); padded columns are
+        # -inf. Serving surfaces slice to vocab_size on the tiny last-token
+        # tensors (model.prefill / model.decode_step).
+        return constrain(logits, rules, ax)

@@ -1,0 +1,465 @@
+"""Generic scan-stacked model composer.
+
+One implementation covers all 6 assigned architecture families (dense,
+encoder-only, VLM, SSM, MoE, hybrid): ``cfg.block_plan()`` yields a periodic
+sequence of block kinds; full periods are stacked (params get a leading
+``layers`` dim) and executed with one ``lax.scan`` so HLO size and compile
+time are O(period), not O(n_layers) — required to dry-run 100-layer models.
+
+Public entry points (all pure functions of (params, cfg, rules, ...)):
+  forward      — full-sequence logits (train / encoder)
+  loss         — next-token (or frame-classification) CE + MoE aux loss
+  prefill      — process a prompt, return last-position logits + cache
+  decode_step  — one autoregressive token against the cache (serve_step)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, CROSS, SHARED_ATTN, SSM, ArchConfig)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embed_abstract, embed_apply, norm_abstract,
+                                 norm_apply, mlp_abstract, mlp_apply,
+                                 unembed_apply)
+from repro.models.params import (ParamSpec, init_tree, tree_sds,
+                                 tree_shardings)
+from repro.sharding import (BATCH, HEAD_DIM, KV_HEADS, KV_SEQ, LAYERS, SEQ,
+                            SSM_HEADS, STATE, CONV_CH, D_MODEL,
+                            ShardingRules, constrain)
+
+Pytree = Any
+
+
+# ----------------------------------------------------------- structure ----
+def plan_structure(cfg: ArchConfig) -> Tuple[Tuple[str, ...], int, int]:
+    """(slots_of_one_period, n_rep, n_remainder)."""
+    plan = cfg.block_plan()
+    if cfg.arch_type == "hybrid":
+        p = cfg.attn_every
+    elif cfg.arch_type == "vlm":
+        p = cfg.cross_every
+    else:
+        p = 1
+    n_rep = cfg.n_layers // p
+    rem = cfg.n_layers - n_rep * p
+    return plan[:p], n_rep, rem
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def _stack_spec(tree, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (LAYERS,) + s.logical, s.dtype,
+                            s.init, s.fan_in), tree, is_leaf=_is_spec)
+
+
+def block_abstract(cfg: ArchConfig, kind: str) -> Dict:
+    if kind == SSM:
+        return {"ln1": norm_abstract(cfg), "ssm": ssm_mod.ssm_abstract(cfg)}
+    if kind == SHARED_ATTN:
+        return {}    # weights live in params['shared']
+    p = {"ln1": norm_abstract(cfg), "attn": attn_mod.attn_abstract(cfg),
+         "ln2": norm_abstract(cfg)}
+    if cfg.moe is not None and kind == ATTN:
+        p["ffn"] = moe_mod.moe_abstract(cfg)
+    else:
+        p["ffn"] = mlp_abstract(cfg)
+    return p
+
+
+def abstract_params(cfg: ArchConfig) -> Pytree:
+    cfg.validate()
+    slots, n_rep, rem = plan_structure(cfg)
+    plan = cfg.block_plan()
+    tree: Dict[str, Any] = {"embed": embed_abstract(cfg)}
+    tree["stack"] = [_stack_spec(block_abstract(cfg, k), n_rep) for k in slots]
+    tree["rem"] = [block_abstract(cfg, k) for k in plan[n_rep * len(slots):]]
+    if SHARED_ATTN in plan:
+        shared = {"ln1": norm_abstract(cfg),
+                  "attn": attn_mod.attn_abstract(cfg),
+                  "ln2": norm_abstract(cfg), "ffn": mlp_abstract(cfg)}
+        tree["shared"] = shared
+    tree["final_norm"] = norm_abstract(cfg)
+    return tree
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Pytree:
+    return init_tree(abstract_params(cfg), key)
+
+
+def param_shardings(cfg: ArchConfig, rules: ShardingRules) -> Pytree:
+    return tree_shardings(abstract_params(cfg), rules)
+
+
+def param_sds(cfg: ArchConfig) -> Pytree:
+    return tree_sds(abstract_params(cfg))
+
+
+# --------------------------------------------------------------- cache ----
+def _cache_entry_abstract(cfg: ArchConfig, kind: str, batch: int,
+                          kv_len: int) -> Dict:
+    dt = cfg.dtype
+    if kind == SSM:
+        d_in, nh, conv_ch = ssm_mod._dims(cfg)
+        return {
+            "h": ParamSpec((batch, nh, cfg.ssm.head_dim, cfg.ssm.d_state),
+                           (BATCH, SSM_HEADS, None, STATE), jnp.dtype("float32"),
+                           "zeros", 1),
+            "conv": ParamSpec((batch, cfg.ssm.conv_width - 1, conv_ch),
+                              (BATCH, None, CONV_CH), jnp.dtype(dt), "zeros", 1),
+        }
+    if kind == CROSS:
+        shape = (batch, cfg.n_img_tokens, cfg.n_kv_heads, cfg.hd)
+        ax = (BATCH, None, KV_HEADS, HEAD_DIM)
+    else:
+        shape = (batch, kv_len, cfg.n_kv_heads, cfg.hd)
+        ax = (BATCH, KV_SEQ, KV_HEADS, HEAD_DIM)
+    return {"k": ParamSpec(shape, ax, jnp.dtype(dt), "zeros", 1),
+            "v": ParamSpec(shape, ax, jnp.dtype(dt), "zeros", 1)}
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, kv_len: int) -> Pytree:
+    """ParamSpec tree for the serving cache. kv_len already accounts for
+    sliding windows (callers pass min(seq, window))."""
+    slots, n_rep, rem = plan_structure(cfg)
+    plan = cfg.block_plan()
+    if cfg.sliding_window:
+        kv_len = min(kv_len, cfg.sliding_window)
+    tree = {
+        "stack": [_stack_spec(_cache_entry_abstract(cfg, k, batch, kv_len),
+                              n_rep) for k in slots],
+        "rem": [_cache_entry_abstract(cfg, k, batch, kv_len)
+                for k in plan[n_rep * len(slots):]],
+    }
+    return tree
+
+
+def init_cache(cfg: ArchConfig, batch: int, kv_len: int) -> Pytree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, kv_len), is_leaf=_is_spec)
+
+
+def cache_shardings(cfg: ArchConfig, rules: ShardingRules, batch: int,
+                    kv_len: int) -> Pytree:
+    return tree_shardings(abstract_cache(cfg, batch, kv_len), rules)
+
+
+def cache_sds(cfg: ArchConfig, batch: int, kv_len: int) -> Pytree:
+    return tree_sds(abstract_cache(cfg, batch, kv_len))
+
+
+# -------------------------------------------------------------- blocks ----
+def _ffn_apply(bp, x, cfg, rules, capacity_factor):
+    if cfg.moe is not None and "router" in bp:
+        return moe_mod.moe_ffn(bp, x, cfg, rules,
+                               capacity_factor=capacity_factor)
+    return mlp_apply(bp, x, cfg, rules), jnp.zeros((), jnp.float32)
+
+
+def block_apply_seq(kind: str, bp, x, cfg: ArchConfig, rules: ShardingRules,
+                    *, positions, lengths, img_embeds, shared,
+                    capacity_factor: float, h0=None, conv0=None):
+    """Returns (x, cache_entry, aux)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind == SSM:
+        h, cache = ssm_mod.ssm_seq(bp["ssm"], norm_apply(bp["ln1"], x, cfg),
+                                   cfg, rules, h0=h0, conv0=conv0)
+        return x + h, cache, zero
+    if kind == SHARED_ATTN:
+        bp = shared
+    if kind == CROSS:
+        k, v = attn_mod.cross_attn_kv(bp["attn"], img_embeds, cfg, rules)
+        h = attn_mod.cross_attn_apply(bp["attn"],
+                                      norm_apply(bp["ln1"], x, cfg), k, v,
+                                      cfg, rules)
+        x = x + h
+        f, aux = _ffn_apply(bp["ffn"], norm_apply(bp["ln2"], x, cfg), cfg,
+                            rules, capacity_factor)
+        return x + f, {"k": k, "v": v}, aux
+    # ATTN / SHARED_ATTN
+    h, (k, v) = attn_mod.self_attn_seq(
+        bp["attn"], norm_apply(bp["ln1"], x, cfg), cfg, rules,
+        positions=positions, causal=cfg.causal, window=cfg.sliding_window,
+        lengths=lengths)
+    x = x + h
+    f, aux = _ffn_apply(bp["ffn"], norm_apply(bp["ln2"], x, cfg), cfg, rules,
+                        capacity_factor)
+    return x + f, {"k": k, "v": v}, aux
+
+
+def block_apply_decode(kind: str, bp, x, cache_entry, cfg: ArchConfig,
+                       rules: ShardingRules, *, pos, lengths, shared,
+                       capacity_factor: float):
+    """Returns (x, new_cache_entry)."""
+    if kind == SSM:
+        h, cache = ssm_mod.ssm_decode(bp["ssm"],
+                                      norm_apply(bp["ln1"], x, cfg),
+                                      cache_entry, cfg, rules)
+        return x + h, cache
+    if kind == SHARED_ATTN:
+        bp = shared
+    if kind == CROSS:
+        h = attn_mod.cross_attn_apply(
+            bp["attn"], norm_apply(bp["ln1"], x, cfg),
+            cache_entry["k"].astype(x.dtype), cache_entry["v"].astype(x.dtype),
+            cfg, rules)
+        x = x + h
+        f, _ = _ffn_apply(bp["ffn"], norm_apply(bp["ln2"], x, cfg), cfg,
+                          rules, capacity_factor)
+        return x + f, cache_entry
+    h, (ck, cv) = attn_mod.self_attn_decode(
+        bp["attn"], norm_apply(bp["ln1"], x, cfg), cache_entry["k"],
+        cache_entry["v"], cfg, rules, pos=pos, window=cfg.sliding_window,
+        lengths=lengths)
+    x = x + h
+    f, _ = _ffn_apply(bp["ffn"], norm_apply(bp["ln2"], x, cfg), cfg, rules,
+                      capacity_factor)
+    return x + f, {"k": ck, "v": cv}
+
+
+# --------------------------------------------------------------- stack ----
+def _embed_inputs(params, cfg, rules, batch, positions):
+    if cfg.embedding_inputs:
+        x = batch["embeds"].astype(cfg.activation_dtype)
+        if cfg.pos == "learned":
+            x = x + jnp.take(params["embed"]["pos"], positions,
+                             axis=0).astype(x.dtype)
+        return constrain(x, rules, (BATCH, SEQ, D_MODEL))
+    return embed_apply(params["embed"], batch["tokens"], positions, cfg, rules)
+
+
+def _stack_seq(params, x, cfg, rules, *, positions, lengths, img_embeds,
+               capacity_factor, init_state=None):
+    """Run all layers over a full sequence. Returns (x, cache, aux)."""
+    slots, n_rep, _ = plan_structure(cfg)
+    plan = cfg.block_plan()
+    shared = params.get("shared")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def period_body(carry, xs):
+        x, aux = carry
+        slot_params, slot_caches_in = xs
+        caches = []
+        for j, kind in enumerate(slots):
+            h0 = conv0 = None
+            if kind == SSM and slot_caches_in is not None:
+                h0 = slot_caches_in[j].get("h")
+                conv0 = slot_caches_in[j].get("conv")
+            x, cache, aux_j = block_apply_seq(
+                kind, slot_params[j], x, cfg, rules, positions=positions,
+                lengths=lengths, img_embeds=img_embeds, shared=shared,
+                capacity_factor=capacity_factor, h0=h0, conv0=conv0)
+            caches.append(cache)
+            aux = aux + aux_j
+        return (x, aux), caches
+
+    if n_rep > 0:
+        body = jax.checkpoint(lambda c, xs: period_body(c, (xs, None)))
+        (x, aux_total), caches = jax.lax.scan(
+            body, (x, aux_total), tuple(params["stack"]))
+    else:
+        caches = [None] * len(slots)
+    rem_caches = []
+    rem_plan = plan[n_rep * len(slots):]
+    for bp, kind in zip(params["rem"], rem_plan):
+        x, cache, aux_j = block_apply_seq(
+            kind, bp, x, cfg, rules, positions=positions, lengths=lengths,
+            img_embeds=img_embeds, shared=shared,
+            capacity_factor=capacity_factor)
+        rem_caches.append(cache)
+        aux_total = aux_total + aux_j
+    x = norm_apply(params["final_norm"], x, cfg)
+    return x, {"stack": caches, "rem": rem_caches}, aux_total
+
+
+def _stack_decode(params, cache, x, cfg, rules, *, pos, lengths,
+                  capacity_factor):
+    slots, n_rep, _ = plan_structure(cfg)
+    plan = cfg.block_plan()
+    shared = params.get("shared")
+
+    def period_body(x, xs):
+        slot_params, slot_caches = xs
+        new_caches = []
+        for j, kind in enumerate(slots):
+            x, c = block_apply_decode(
+                kind, slot_params[j], x, slot_caches[j], cfg, rules, pos=pos,
+                lengths=lengths, shared=shared,
+                capacity_factor=capacity_factor)
+            new_caches.append(c)
+        return x, new_caches
+
+    if n_rep > 0:
+        x, new_stack = jax.lax.scan(
+            period_body, x, (tuple(params["stack"]), tuple(cache["stack"])))
+    else:
+        new_stack = []
+    new_rem = []
+    rem_plan = plan[n_rep * len(slots):]
+    for bp, ce, kind in zip(params["rem"], cache["rem"], rem_plan):
+        x, c = block_apply_decode(kind, bp, x, ce, cfg, rules, pos=pos,
+                                  lengths=lengths, shared=shared,
+                                  capacity_factor=capacity_factor)
+        new_rem.append(c)
+    x = norm_apply(params["final_norm"], x, cfg)
+    return x, {"stack": new_stack, "rem": new_rem}
+
+
+# ----------------------------------------------------------- public API ----
+def forward(params, cfg: ArchConfig, rules: ShardingRules,
+            batch: Dict) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence logits. Returns (logits [B,S,V], aux_loss)."""
+    some = batch.get("tokens", batch.get("embeds"))
+    S = some.shape[1]
+    positions = jnp.arange(S)
+    x = _embed_inputs(params, cfg, rules, batch, positions)
+    x, _, aux = _stack_seq(params, x, cfg, rules, positions=positions,
+                           lengths=batch.get("lengths"),
+                           img_embeds=batch.get("img_embeds"),
+                           capacity_factor=(cfg.moe.capacity_factor
+                                            if cfg.moe else 1.0))
+    logits = unembed_apply(params["embed"], x, cfg, rules)
+    return logits, aux
+
+
+def loss(params, cfg: ArchConfig, rules: ShardingRules,
+         batch: Dict) -> jax.Array:
+    logits, aux = forward(params, cfg, rules, batch)
+    labels = batch["labels"]
+    valid = labels >= 0
+    labs = jnp.where(valid, labels, 0)
+    with jax.named_scope("loss"):
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # label pick via iota-compare (shard-local on a vocab-sharded dim;
+        # take_along_axis would force SPMD to replicate the logits)
+        vio = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        picked = jnp.sum(jnp.where(vio == labs[..., None], logits, 0.0),
+                         axis=-1)
+        ce = jnp.where(valid, lse - picked, 0.0)
+        n = jnp.maximum(jnp.sum(valid), 1)
+        return jnp.sum(ce) / n + aux
+
+
+def prefill(params, cfg: ArchConfig, rules: ShardingRules, batch: Dict,
+            cache_len: Optional[int] = None):
+    """Process a prompt. Returns (last_logits [B,V], cache, next_pos).
+
+    With padded prompts pass ``batch['lengths']`` ([B] valid lengths); the
+    logits are then taken at each request's last valid position.
+    """
+    some = batch.get("tokens", batch.get("embeds"))
+    B, S = some.shape[0], some.shape[1]
+    positions = jnp.arange(S)
+    x = _embed_inputs(params, cfg, rules, batch, positions)
+    # prefill dispatches S tokens/request: use the train-style capacity
+    # factor (the generous serve factor is for single-token decode steps)
+    cf = cfg.moe.capacity_factor if cfg.moe else 1.0
+    x, cache, _ = _stack_seq(params, x, cfg, rules, positions=positions,
+                             lengths=batch.get("lengths"),
+                             img_embeds=batch.get("img_embeds"),
+                             capacity_factor=cf)
+    lengths = batch.get("lengths")
+    if lengths is not None:
+        last = x[jnp.arange(B), lengths - 1][:, None, :]
+    else:
+        last = x[:, -1:, :]
+    logits = unembed_apply(params["embed"], last, cfg, rules)[:, 0]
+    logits = logits[:, :cfg.vocab_size]
+    cache = _finalize_prefill_cache(cache, cfg, S, cache_len)
+    return logits, cache, S
+
+
+def _finalize_prefill_cache(cache, cfg: ArchConfig, S: int,
+                            cache_len: Optional[int]):
+    """Pad/ring-arrange attention KV from prefill into decode layout."""
+    W = cfg.sliding_window
+
+    def fix(entry, kind):
+        if kind == SSM or kind == CROSS or entry is None:
+            return entry
+        k, v = entry["k"], entry["v"]
+
+        def arrange(a):
+            # a: [..., S, K, hd] (leading layer dim possible)
+            if W is not None and S > W:
+                idx = jnp.arange(S - W, S) % W
+                ring = jnp.zeros(a.shape[:-3] + (W,) + a.shape[-2:], a.dtype)
+                ring = ring.at[..., idx, :, :].set(a[..., S - W:, :, :])
+                return ring
+            tgt = min(cache_len or S, W or (cache_len or S))
+            if a.shape[-3] < tgt:
+                pad = [(0, 0)] * a.ndim
+                pad[-3] = (0, tgt - a.shape[-3])
+                return jnp.pad(a, pad)
+            return a
+        return {"k": arrange(k), "v": arrange(v)}
+
+    slots, n_rep, _ = plan_structure(cfg)
+    plan = cfg.block_plan()
+    out = {"stack": [fix(c, k) for c, k in zip(cache["stack"], slots)],
+           "rem": [fix(c, k) for c, k in
+                   zip(cache["rem"], plan[n_rep * len(slots):])]}
+    return out
+
+
+def decode_step(params, cfg: ArchConfig, rules: ShardingRules, cache,
+                tokens, pos, lengths: Optional[jax.Array] = None,
+                embeds: Optional[jax.Array] = None):
+    """One token for every sequence in the batch (the paper's decode phase).
+
+    tokens: [B] int32 (or embeds [B,1,D]); pos: scalar int32 position.
+    Returns (logits [B,V], new_cache).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if embeds is not None:
+        x = embeds.astype(cfg.activation_dtype)
+    else:
+        x = jnp.take(params["embed"]["tok"], tokens[:, None],
+                     axis=0).astype(cfg.activation_dtype)
+        if cfg.pos == "learned":
+            pe = jnp.take(params["embed"]["pos"],
+                          pos.reshape(-1), axis=0).astype(x.dtype)
+            x = x + (pe[:, None, :] if pos.ndim else pe[None])
+    x = constrain(x, rules, (BATCH, SEQ, D_MODEL))
+    x, cache = _stack_decode(params, cache, x, cfg, rules, pos=pos,
+                             lengths=lengths,
+                             capacity_factor=cfg.serve_capacity_factor)
+    logits = unembed_apply(params["embed"], x, cfg, rules)[:, 0]
+    return logits[:, :cfg.vocab_size], cache
+
+
+# --------------------------------------------------------------- facade ----
+@dataclasses.dataclass
+class Model:
+    """Convenience bundle of (cfg, rules) with bound methods."""
+    cfg: ArchConfig
+    rules: ShardingRules
+
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def loss(self, params, batch):
+        return loss(params, self.cfg, self.rules, batch)
+
+    def forward(self, params, batch):
+        return forward(params, self.cfg, self.rules, batch)
+
+    def prefill(self, params, batch, cache_len=None):
+        return prefill(params, self.cfg, self.rules, batch, cache_len)
+
+    def decode_step(self, params, cache, tokens, pos, lengths=None,
+                    embeds=None):
+        return decode_step(params, self.cfg, self.rules, cache, tokens, pos,
+                           lengths, embeds)
+
+    def init_cache(self, batch, kv_len):
+        return init_cache(self.cfg, batch, kv_len)

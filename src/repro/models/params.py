@@ -1,0 +1,72 @@
+"""Single-source-of-truth parameter declaration.
+
+``abstract_params(cfg)`` builds a pytree of ``ParamSpec`` leaves (shape,
+dtype, logical axes, init style). Everything else — real initialization,
+NamedShardings for pjit, ShapeDtypeStructs for the dry-run — is a tree_map
+over that one tree, so shapes/shardings can never diverge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: jnp.dtype
+    init: str = "normal"          # normal | zeros | ones | uniform_conv | dt_bias | a_log
+    fan_in: int = 0               # for scaled normal init
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def pspec(shape, logical, dtype, init="normal", fan_in=0) -> ParamSpec:
+    assert len(shape) == len(logical), (shape, logical)
+    return ParamSpec(tuple(int(s) for s in shape), tuple(logical),
+                     jnp.dtype(dtype), init, fan_in or (shape[-2] if len(shape) >= 2 else shape[-1]))
+
+
+def materialize(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "a_log":
+        # mamba2: A in [1, 16) -> log
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(spec.dtype)
+    if spec.init == "dt_bias":
+        # softplus^-1 of dt in [1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               math.log(1e-3), math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(spec.dtype)
+    scale = 1.0 / math.sqrt(max(spec.fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def init_tree(tree, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [materialize(spec, k) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_shardings(tree, rules: ShardingRules):
+    return jax.tree.map(
+        lambda s: rules.sharding(s.logical, s.shape), tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_sds(tree):
+    return jax.tree.map(lambda s: s.sds(), tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))

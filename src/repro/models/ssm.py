@@ -1,0 +1,218 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+TPU adaptation notes (vs the CUDA reference):
+ - the chunked SSD algorithm maps to einsums (MXU-friendly) + one
+   ``lax.scan`` over chunk boundaries instead of a fused CUDA scan kernel;
+ - the depthwise causal conv (width 4) is computed as a sum of shifted
+   slices — a layout-friendly form for TPU vector units;
+ - decode keeps an O(B·H·P·N) recurrent state and a (W-1)-deep conv tail,
+   both batch-sharded. There is no KV cache: the paper's "attention AI is
+   constant in batch" finding shows up here as the state-streaming term.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import pspec
+from repro.models.layers import gated_rmsnorm_apply
+from repro.sharding import (BATCH, CONV_CH, D_FF, D_MODEL, SEQ, SSM_HEADS,
+                            STATE, W_IN, ShardingRules, constrain)
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.ngroups * s.d_state
+    return d_in, nh, conv_ch
+
+
+def ssm_abstract(cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_ch = _dims(cfg)
+    total = 2 * d_in + 2 * s.ngroups * s.d_state + nh
+    return {
+        "in_proj": pspec((d, total), (D_MODEL, W_IN), cfg.dtype, fan_in=d),
+        "conv_w": pspec((s.conv_width, conv_ch), (None, CONV_CH), cfg.dtype,
+                        init="normal", fan_in=s.conv_width),
+        "conv_b": pspec((conv_ch,), (CONV_CH,), cfg.dtype, init="zeros"),
+        "a_log": pspec((nh,), (SSM_HEADS,), "float32", init="a_log"),
+        "d_skip": pspec((nh,), (SSM_HEADS,), "float32", init="ones"),
+        "dt_bias": pspec((nh,), (SSM_HEADS,), "float32", init="dt_bias"),
+        "norm": pspec((d_in,), (D_MODEL,), cfg.dtype, init="ones"),
+        # row-parallel: contract over the head-sharded d_in, psum out
+        "out_proj": pspec((d_in, d), (D_FF, W_IN), cfg.dtype, fan_in=d_in),
+    }
+
+
+def _split(p, zxbcdt, cfg: ArchConfig):
+    s = cfg.ssm
+    d_in, nh, conv_ch = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_ch]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def _conv_full(xbc, w, b):
+    """Causal depthwise conv over time via shifted adds. xbc: [B,S,C]."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    S = xbc.shape[1]
+    out = b.astype(jnp.float32)
+    acc = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(W):
+        acc = acc + pad[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(acc + out).astype(xbc.dtype)
+
+
+def _conv_step(conv_state, xbc_new, w, b):
+    """conv_state: [B,W-1,C]; xbc_new: [B,1,C] -> (out [B,1,C], new state)."""
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)        # [B,W,C]
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b.astype(jnp.float32)
+    out = jax.nn.silu(out)[:, None, :].astype(xbc_new.dtype)
+    return out, window[:, 1:, :]
+
+
+def _heads(xs, cfg):
+    d_in, nh, _ = _dims(cfg)
+    B, S = xs.shape[:2]
+    return xs.reshape(B, S, nh, cfg.ssm.head_dim)
+
+
+def ssd_chunked(xs, dt, A, B_, C_, cfg: ArchConfig, rules: ShardingRules,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    xs: [B,S,H,P]; dt: [B,S,H] f32; A: [H] f32 (negative);
+    B_/C_: [B,S,G,N]. Returns (y [B,S,H,P], h_final [B,H,P,N] f32).
+    """
+    s = cfg.ssm
+    B, S, H, P = xs.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(s.chunk, S)
+    padlen = (-S) % Q
+    if padlen:
+        padfn = lambda a: jnp.pad(a, [(0, 0), (0, padlen)] + [(0, 0)] * (a.ndim - 2))
+        xs, dt, B_, C_ = map(padfn, (xs, dt, B_, C_))
+    Sp = S + padlen
+    NC = Sp // Q
+    rep = H // G
+    xs_f = xs.astype(jnp.float32).reshape(B, NC, Q, H, P)
+    dt_c = dt.reshape(B, NC, Q, H)
+    Bc = B_.astype(jnp.float32).reshape(B, NC, Q, G, N)
+    Cc = C_.astype(jnp.float32).reshape(B, NC, Q, G, N)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_body(h, inp):
+        # one SSD chunk: intra-chunk quadratic + inter-chunk state carry.
+        # Scanning chunks (instead of materializing [NC,Q,Q,H] tensors for
+        # the whole sequence) bounds the working set to one chunk.
+        xs_c, dt_c, Bc_c, Cc_c = inp       # [B,Q,H,P],[B,Q,H],[B,Q,G,N]x2
+        dA = dt_c * A                                          # [B,Q,H]
+        cs = jnp.cumsum(dA, axis=1)
+        with jax.named_scope("ssd_intra"):
+            seg = cs[:, :, None, :] - cs[:, None, :, :]        # [B,Qi,Qj,H]
+            L = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+            CB = jnp.einsum("bign,bjgn->bijg", Cc_c, Bc_c)     # [B,Q,Q,G]
+            CBh = jnp.repeat(CB, rep, axis=-1) if rep > 1 else CB
+            M = CBh * L * dt_c[:, None, :, :]                  # [B,Qi,Qj,H]
+            y_intra = jnp.einsum("bijh,bjhp->bihp", M, xs_c)
+        with jax.named_scope("ssd_state"):
+            w_last = jnp.exp(cs[:, -1:, :] - cs) * dt_c        # [B,Q,H]
+            Bh = jnp.repeat(Bc_c, rep, axis=-2) if rep > 1 else Bc_c
+            chunk_state = jnp.einsum("bqh,bqhn,bqhp->bhpn", w_last, Bh, xs_c)
+            Ch = jnp.repeat(Cc_c, rep, axis=-2) if rep > 1 else Cc_c
+            y_inter = jnp.einsum("bqhn,bhpn->bqhp", Ch, h) * \
+                jnp.exp(cs)[..., None]
+            decay = jnp.exp(jnp.sum(dA, axis=1))               # [B,H]
+            h_new = h * decay[:, :, None, None] + chunk_state
+        return h_new, y_intra + y_inter
+
+    init = h0.astype(jnp.float32) if h0 is not None else \
+        jnp.zeros((B, H, P, N), jnp.float32)
+    mv = lambda a: jnp.moveaxis(a, 1, 0)
+    h_final, ys = jax.lax.scan(
+        jax.checkpoint(chunk_body),
+        init, (mv(xs_f), mv(dt_c), mv(Bc), mv(Cc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, H, P)[:, :S]
+    return y.astype(xs.dtype), h_final
+
+
+def ssm_seq(p, x, cfg: ArchConfig, rules: ShardingRules,
+            h0=None, conv0=None) -> Tuple[jax.Array, dict]:
+    """Full-sequence Mamba2 mixer. Returns (out [B,S,D], cache dict)."""
+    s = cfg.ssm
+    d_in, nh, conv_ch = _dims(cfg)
+    B, S, _ = x.shape
+    with jax.named_scope("ssm_in_proj"):
+        zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split(p, zxbcdt, cfg)
+    if conv0 is not None:
+        # prepend the conv tail from a previous segment (chunked prefill)
+        xbc_ext = jnp.concatenate([conv0.astype(xbc.dtype), xbc], axis=1)
+        xbc_conv = _conv_full(xbc_ext, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+    else:
+        xbc_conv = _conv_full(xbc, p["conv_w"], p["conv_b"])
+    xbc_conv = constrain(xbc_conv, rules, (BATCH, SEQ, CONV_CH))
+    xs = _heads(xbc_conv[..., :d_in], cfg)
+    xs = constrain(xs, rules, (BATCH, SEQ, SSM_HEADS, None))
+    B_ = xbc_conv[..., d_in:d_in + s.ngroups * s.d_state].reshape(
+        B, S, s.ngroups, s.d_state)
+    C_ = xbc_conv[..., d_in + s.ngroups * s.d_state:].reshape(
+        B, S, s.ngroups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y, h_final = ssd_chunked(xs, dt, A, B_, C_, cfg, rules, h0=h0)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, d_in)
+    y = gated_rmsnorm_apply(p["norm"], y, z)
+    with jax.named_scope("ssm_out_proj"):
+        out = y @ p["out_proj"]
+    out = constrain(out, rules, (BATCH, SEQ, D_MODEL))
+    conv_tail = xbc[:, -(s.conv_width - 1):, :] if S >= s.conv_width - 1 else \
+        jnp.pad(xbc, ((0, 0), (s.conv_width - 1 - S, 0), (0, 0)))
+    return out, {"h": h_final, "conv": conv_tail}
+
+
+def ssm_decode(p, x, cache: dict, cfg: ArchConfig, rules: ShardingRules
+               ) -> Tuple[jax.Array, dict]:
+    """Single-token Mamba2 step. x: [B,1,D]; cache: {'h','conv'}."""
+    s = cfg.ssm
+    d_in, nh, conv_ch = _dims(cfg)
+    B = x.shape[0]
+    with jax.named_scope("ssm_in_proj"):
+        zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split(p, zxbcdt, cfg)
+    xbc_conv, conv_new = _conv_step(cache["conv"].astype(xbc.dtype), xbc,
+                                    p["conv_w"], p["conv_b"])
+    xs = _heads(xbc_conv[..., :d_in], cfg)[:, 0]            # [B,H,P]
+    B_ = xbc_conv[:, 0, d_in:d_in + s.ngroups * s.d_state].reshape(
+        B, s.ngroups, s.d_state)
+    C_ = xbc_conv[:, 0, d_in + s.ngroups * s.d_state:].reshape(
+        B, s.ngroups, s.d_state)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["a_log"])
+    rep = nh // s.ngroups
+    Bh = jnp.repeat(B_, rep, axis=1) if rep > 1 else B_      # [B,H,N]
+    Ch = jnp.repeat(C_, rep, axis=1) if rep > 1 else C_
+    with jax.named_scope("ssm_state_update"):
+        h = cache["h"].astype(jnp.float32)                   # [B,H,P,N]
+        decay = jnp.exp(dt1 * A)[:, :, None, None]
+        upd = dt1[:, :, None, None] * xs.astype(jnp.float32)[..., None] * \
+            Bh.astype(jnp.float32)[:, :, None, :]
+        h = h * decay + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32))
+    y = (y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]).astype(x.dtype)
+    y = y.reshape(B, 1, d_in)
+    y = gated_rmsnorm_apply(p["norm"], y, z)
+    with jax.named_scope("ssm_out_proj"):
+        out = y @ p["out_proj"]
+    return out, {"h": h, "conv": conv_new}

@@ -1,0 +1,3 @@
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig  # noqa
+from repro.serving.workload import sharegpt_like, Request  # noqa
+from repro.serving.metrics import ServingMetrics  # noqa

@@ -1,0 +1,50 @@
+"""Serving metrics: throughput, ITL, E2E, KV usage (paper Tables I/IV)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.serving.workload import Request
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    wall_s: float
+    total_tokens: int            # input + output (paper's throughput unit)
+    output_tokens: int
+    itl_s: float                 # mean inter-token latency
+    e2e_s: float                 # mean request end-to-end latency
+    max_kv_fraction: float
+    avg_batch: float
+
+    @property
+    def throughput(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def output_throughput(self) -> float:
+        return self.output_tokens / max(self.wall_s, 1e-9)
+
+    def row(self) -> str:
+        return (f"T={self.throughput:.1f} tok/s  ITL={self.itl_s*1e3:.2f} ms  "
+                f"E2E={self.e2e_s:.2f} s  KV_max={self.max_kv_fraction*100:.1f}%  "
+                f"avgB={self.avg_batch:.1f}")
+
+
+def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
+            max_kv_fraction: float, batch_samples: List[int]
+            ) -> ServingMetrics:
+    done = [r for r in requests if r.t_done is not None]
+    total_in = sum(r.prompt_len for r in done)
+    total_out = sum(r.generated for r in done)
+    e2e = [r.t_done - r.arrival_s for r in done]
+    return ServingMetrics(
+        wall_s=wall_s,
+        total_tokens=total_in + total_out,
+        output_tokens=total_out,
+        itl_s=float(np.mean(itl_samples)) if itl_samples else 0.0,
+        e2e_s=float(np.mean(e2e)) if e2e else 0.0,
+        max_kv_fraction=max_kv_fraction,
+        avg_batch=float(np.mean(batch_samples)) if batch_samples else 0.0)

@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code annotates tensors with *logical* axis names. ``ShardingRules``
+maps each logical name to a list of candidate mesh-axis assignments; the
+first candidate whose mesh size divides the tensor dimension wins, else the
+dimension is replicated.  This is what makes e.g. ``qwen2.5-3b`` (kv=2
+heads, model axis 16) lower cleanly: ``kv_heads -> model`` fails the
+divisibility check and falls through to replication while the KV *sequence*
+dim picks up the model axis instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisAssignment = Union[str, Tuple[str, ...], None]
+
+# Logical axis vocabulary used by the model code.
+BATCH = "batch"
+SEQ = "seq"              # query/sequence dim of activations (unsharded)
+KV_SEQ = "kv_seq"        # KV-cache sequence dim (sharded on model when heads aren't)
+HEADS = "heads"
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"    # fallback shard target when heads % model != 0
+D_MODEL = "d_model"
+D_FF = "d_ff"
+W_IN = "w_in"            # weight input dim: data-axes sharded under fsdp
+VOCAB = "vocab"
+EXPERTS = "experts"
+SSM_HEADS = "ssm_heads"
+CONV_CH = "conv_ch"
+LAYERS = "layers"        # stacked-layer leading dim (never sharded)
+STATE = "state"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names to mesh axes, with per-tensor fallback."""
+    mesh: Mesh
+    # data-parallel axes, e.g. ("data",) or ("pod", "data")
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    # when True the KV-cache sequence dim is sharded on the model axis
+    # (used when kv_heads isn't divisible by the model axis).
+    shard_kv_seq: bool = False
+    # when True, weights additionally shard their largest dim over the batch
+    # axes (FSDP/ZeRO-3 style) — used for models too big for pure TP.
+    fsdp: bool = False
+    # §Perf variant: keep activations feature-replicated between blocks
+    # (classic Megatron) instead of d_model-sharded — trades activation
+    # memory for the per-matmul all-gathers of the sharded-activation form.
+    act_replicated: bool = False
+
+    def axis_size(self, assignment: AxisAssignment) -> int:
+        if assignment is None:
+            return 1
+        if isinstance(assignment, str):
+            assignment = (assignment,)
+        return math.prod(self.mesh.shape[a] for a in assignment)
+
+    def candidates(self, logical: Optional[str]) -> Sequence[AxisAssignment]:
+        m, b = self.model_axis, self.batch_axes
+        table: Dict[str, Sequence[AxisAssignment]] = {
+            BATCH: (b, None),
+            SEQ: (None,),
+            KV_SEQ: ((m,) if self.shard_kv_seq else (None,)),
+            HEADS: (m, None),
+            KV_HEADS: ((None,) if self.shard_kv_seq else (m, None)),
+            HEAD_DIM: (m, None),
+            D_MODEL: ((None,) if self.act_replicated else (m, None)),
+            D_FF: (m, None),
+            W_IN: ((b, None) if self.fsdp else (None,)),
+            VOCAB: (m, None),
+            EXPERTS: (b, None),
+            SSM_HEADS: (m, None),
+            CONV_CH: (m, None),
+            STATE: (None,),
+            LAYERS: (None,),
+        }
+        if logical is None:
+            return (None,)
+        return table[logical]
+
+    def assign(self, logical: Optional[str], dim: int) -> AxisAssignment:
+        for cand in self.candidates(logical):
+            if cand is None:
+                return None
+            if dim % self.axis_size(cand) == 0:
+                return cand
+        return None
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        """PartitionSpec for a tensor with the given logical axes + shape."""
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        used: set = set()
+        out = []
+        for name, dim in zip(logical_axes, shape):
+            a = self.assign(name, dim)
+            # a mesh axis may appear at most once in a PartitionSpec
+            flat = (a,) if isinstance(a, str) else (a or ())
+            if a is not None and any(x in used for x in flat):
+                a = None
+            else:
+                used.update(flat)
+            out.append(a)
+        return P(*out)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def constrain(x: jax.Array, rules: ShardingRules,
+              logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op on 1-device mesh)."""
+    if math.prod(rules.mesh.shape.values()) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(logical_axes, x.shape))
+
+
+def rules_for(mesh: Mesh, *, shard_kv_seq: bool = False,
+              fsdp: bool = False,
+              act_replicated: bool = False) -> ShardingRules:
+    """Build rules from a mesh, inferring batch axes from axis names."""
+    names = tuple(mesh.axis_names)
+    batch_axes = tuple(n for n in names if n in ("pod", "data"))
+    assert "model" in names, f"mesh must have a 'model' axis, got {names}"
+    return ShardingRules(mesh=mesh, batch_axes=batch_axes or (names[0],),
+                         shard_kv_seq=shard_kv_seq, fsdp=fsdp,
+                         act_replicated=act_replicated)

@@ -1,0 +1,4 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update  # noqa
+from repro.training.train import make_train_step, TrainState  # noqa
+from repro.training.data import synthetic_batches  # noqa
+from repro.training.checkpoint import save_checkpoint, load_checkpoint  # noqa

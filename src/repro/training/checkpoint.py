@@ -1,0 +1,49 @@
+"""Flat-npz checkpointing for param/optimizer pytrees (host-sharded save)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"__step__": np.asarray(step)}
+    for k, v in _flatten(params).items():
+        payload[f"p/{k}"] = v
+    if opt_state is not None:
+        for k, v in _flatten(opt_state).items():
+            payload[f"o/{k}"] = v
+    np.savez(path, **payload)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None
+                    ) -> Tuple[Any, Any, int]:
+    data = np.load(path, allow_pickle=False)
+    step = int(data["__step__"])
+
+    def restore(template, prefix):
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in paths:
+            key = prefix + "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = restore(params_template, "p/")
+    opt = restore(opt_template, "o/") if opt_template is not None else None
+    return params, opt, step

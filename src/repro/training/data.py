@@ -1,0 +1,37 @@
+"""Synthetic next-token data pipeline.
+
+Generates a deterministic stream of (tokens, labels) batches with a
+Zipf-flavoured unigram distribution (more realistic logit statistics than
+uniform) and next-token-shifted labels. Encoder configs get frame
+embeddings + per-frame class labels (the HuBERT masked-unit stub).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def synthetic_batches(cfg: ArchConfig, *, batch: int, seq: int,
+                      seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    v = cfg.vocab_size
+    ranks = np.arange(1, v + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    while True:
+        out: Dict[str, np.ndarray] = {}
+        if cfg.embedding_inputs:
+            out["embeds"] = rng.standard_normal(
+                (batch, seq, cfg.d_model)).astype(np.float32) * 0.02
+            out["labels"] = rng.integers(0, v, (batch, seq)).astype(np.int32)
+        else:
+            toks = rng.choice(v, size=(batch, seq + 1), p=probs).astype(np.int32)
+            out["tokens"] = toks[:, :-1]
+            out["labels"] = toks[:, 1:].copy()
+        if cfg.arch_type == "vlm":
+            out["img_embeds"] = rng.standard_normal(
+                (batch, cfg.n_img_tokens, cfg.d_model)).astype(np.float32) * 0.02
+        yield out

@@ -1,0 +1,75 @@
+"""Hand-rolled AdamW with cosine schedule (no optax dependency).
+
+Moments are fp32 regardless of parameter dtype; updates are computed in
+fp32 and cast back. Moment tensors inherit the parameter PartitionSpecs,
+so the optimizer state shards exactly like the weights (ZeRO-ish when the
+weight rules include fsdp axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * \
+        (1 + jnp.cos(math.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params) -> Tuple[Any, Any, jax.Array]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return (jax.tree.map(f32, params), jax.tree.map(f32, params),
+            jnp.zeros((), jnp.int32))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt_state):
+    m, v, step = opt_state
+    step = step + 1
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_, v_):
+        g = g.astype(jnp.float32) * scale
+        m_n = cfg.b1 * m_ + (1 - cfg.b1) * g
+        v_n = cfg.b2 * v_ + (1 - cfg.b2) * jnp.square(g)
+        mh = m_n / b1c
+        vh = v_n / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:                       # decoupled decay, not on norms
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_n, v_n
+
+    out = jax.tree.map(upd, params, grads, m, v)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, (new_m, new_v, step), gnorm

@@ -1,0 +1,78 @@
+"""Sharded train step: loss -> grad -> AdamW, donate-safe."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.sharding import ShardingRules
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+
+    @classmethod
+    def create(cls, cfg: ArchConfig, key: jax.Array) -> "TrainState":
+        params = model_lib.init_params(cfg, key)
+        return cls(params=params, opt_state=adamw_init(params))
+
+
+def make_train_step(cfg: ArchConfig, rules: ShardingRules,
+                    opt: AdamWConfig, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch is
+    split along dim 0 and scanned, bounding saved activations to one
+    microbatch's worth (the deep-model memory knob for train_4k).
+    """
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(model_lib.loss)(params, cfg, rules, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_sum, g_sum = carry
+                loss, g = grad_fn(params, mb)
+                return (loss_sum + loss,
+                        jax.tree.map(jnp.add, g_sum, g)), ()
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt_state, gnorm = adamw_update(opt, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def opt_state_shardings(cfg: ArchConfig, rules: ShardingRules):
+    ps = model_lib.param_shardings(cfg, rules)
+    import jax.sharding as jsh
+    scalar = jsh.NamedSharding(rules.mesh, jsh.PartitionSpec())
+    return (ps, ps, scalar)
+
+
+def opt_state_sds(cfg: ArchConfig):
+    import jax.numpy as jnp
+    sds = model_lib.param_sds(cfg)
+    f32 = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                       sds)
+    return (f32, f32, jax.ShapeDtypeStruct((), jnp.int32))

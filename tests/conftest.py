@@ -1,0 +1,22 @@
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def mesh():
+    """1x1 mesh with production axis names (smoke tests see 1 device —
+    the 512-device override belongs ONLY to launch/dryrun.py)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def rules(mesh):
+    from repro.sharding import rules_for
+    return rules_for(mesh)
+
+
+@pytest.fixture(autouse=True)
+def _use_mesh(mesh):
+    with jax.set_mesh(mesh):
+        yield

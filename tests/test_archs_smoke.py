@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(2 layers, d_model<=512, <=4 experts) runs one forward + one train step on
+CPU; output shapes checked, no NaNs. (Deliverable f.)"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, PAPER_MODELS, get_config, reduced
+from repro.models import model as M
+from repro.training import AdamWConfig, adamw_init, make_train_step
+
+ALL_ARCHS = sorted(ASSIGNED) + sorted(PAPER_MODELS)
+
+
+def _reduced(name):
+    cfg = reduced(get_config(name))
+    if cfg.arch_type == "hybrid":
+        cfg = dataclasses.replace(cfg, n_layers=5, attn_every=2)
+    return cfg
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+    if cfg.embedding_inputs:
+        b["embeds"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32) * 0.02
+    else:
+        b["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                                  jnp.int32)
+    if cfg.arch_type == "vlm":
+        b["img_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_img_tokens, cfg.d_model)),
+            jnp.float32) * 0.02
+    return b
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_shapes_and_finite(name, rules):
+    cfg = _reduced(name)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = M.forward(params, cfg, rules, batch)
+    B, S = batch["labels"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_one_train_step(name, rules):
+    cfg = _reduced(name)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, rules,
+                                   AdamWConfig(lr=1e-3, warmup_steps=1,
+                                               total_steps=10)))
+    batch = _batch(cfg)
+    params, opt_state, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(params):
+        assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("name", [n for n in ALL_ARCHS
+                                  if get_config(n).is_decoder])
+def test_decode_step_shapes(name, rules):
+    cfg = _reduced(name)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    batch.pop("labels")
+    logits, cache, pos = M.prefill(params, cfg, rules, batch, cache_len=24)
+    B = 2
+    assert logits.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    lg, cache = M.decode_step(params, cfg, rules, cache, tok, jnp.int32(16))
+    assert lg.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_microbatched_train_matches_full(rules):
+    cfg = _reduced("internlm2-1.8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, B=4, S=16)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    p1, _, m1 = jax.jit(make_train_step(cfg, rules, opt, 1))(
+        params, adamw_init(params), batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg, rules, opt, 2))(
+        params, adamw_init(params), batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    # accumulation order changes fp rounding; Adam normalizes tiny grads so
+    # per-step param deltas can differ at ~1e-4 scale legitimately
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 1e-3, d

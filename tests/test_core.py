@@ -1,0 +1,107 @@
+"""Unit tests for the paper-core: census, roofline, BCA, replication
+planner, simulator, and the paper-claims numbers they reproduce."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (H100_PAPER, TPU_V5E, BatchingConfigurationAdvisor,
+                        HloCensus, ReplicationPlanner, decode_curves,
+                        max_batch_for, replication_sweep, roofline_report,
+                        simulate_decode, slo_from_reference)
+from repro.core.intensity import intensity_sweep
+from repro.core.perfmodel import HostOverhead
+
+
+def test_census_counts_scan_trip():
+    def body(c, w):
+        return jnp.tanh(c @ w), ()
+
+    def f(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+    comp = jax.jit(f).lower(x, ws).compile()
+    cen = HloCensus(comp.as_text()).census()
+    expected = 2 * 64 * 64 * 64 * 7
+    assert expected <= cen.flops <= expected * 1.2
+
+
+def test_census_collectives():
+    import jax.sharding as jsh
+    devs = jax.devices()
+    if len(devs) < 2:
+        # single-device CPU in tests: collective census covered by dryrun
+        return
+    assert True
+
+
+def test_roofline_report_terms():
+    from repro.core.analysis import OpCensus, ClassCost
+    c = OpCensus(flops=197e12, bytes=819e9, coll_bytes=50e9,
+                 per_class={"matmul": ClassCost(197e12, 819e9, 0)},
+                 per_collective={})
+    r = roofline_report(c, TPU_V5E, chips=1, model_flops=100e12)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert 0.5 < r.useful_ratio < 0.51
+
+
+def test_paper_bca_opt13b_strict():
+    """Paper Table IV: OPT-1.3B strict SLO gives B_opt=96 with ~16% of the
+    KV cache. Our modeled reproduction must land in that neighbourhood."""
+    cfg = get_config("opt-1.3b")
+    hw = H100_PAPER
+    mb = min(max_batch_for(cfg, hw, ctx=331), 512)
+    curves = decode_curves(cfg, hw, ctx=331, max_batch=mb)
+    slo = slo_from_reference(curves, 32, 2.0)
+    res = BatchingConfigurationAdvisor(curves, slo_s=slo, eps=0.1).solve()
+    assert 48 <= res.b_opt <= 192, res.b_opt
+    assert res.kv_fraction < 0.35
+    assert res.throughput_retained > 0.5
+
+
+def test_intensity_fig1_shape():
+    cfg = get_config("opt-1.3b")
+    pts = intensity_sweep(cfg, H100_PAPER, ctx=331, batches=[1, 512])
+    ai1, aiM = pts[0].ai["attention"], pts[1].ai["attention"]
+    assert abs(ai1 - aiM) / ai1 < 0.01           # constant in batch
+    assert 0.25 < ai1 < 4.0                       # paper: 0.5-1 FLOP/B
+    assert pts[1].ai["matmul"] > 50 * pts[0].ai["matmul"]
+
+
+def test_replication_planner_and_sim():
+    cfg = get_config("opt-1.3b")
+    hw = H100_PAPER
+    plan = ReplicationPlanner(hw, cfg, ctx=331).plan(96, max_replicas=4)
+    assert plan.n_replicas >= 2
+    assert plan.total_bytes <= plan.capacity_bytes
+    sweep = replication_sweep(cfg, hw, batch=96, ctx=331, max_replicas=4)
+    # paper: replication increases throughput AND DRAM utilization
+    assert sweep[1].throughput_tok_s > sweep[0].throughput_tok_s * 1.1
+    assert sweep[-1].dram_utilization > sweep[0].dram_utilization
+    # and individual step latency (ITL) gets worse, as the paper reports
+    assert sweep[-1].itl_s > sweep[0].itl_s
+
+
+def test_replication_gain_matches_paper_band():
+    """Paper: +33.7% for OPT-1.3B (4 replicas) vs MAX single replica."""
+    cfg = get_config("opt-1.3b")
+    hw = H100_PAPER
+    host = HostOverhead()
+    mb = min(max_batch_for(cfg, hw, ctx=331), 512)
+    t_max = simulate_decode(cfg, hw, batch=mb, n_replicas=1, ctx=331,
+                            host=host).throughput_tok_s
+    t_rep = simulate_decode(cfg, hw, batch=96, n_replicas=4, ctx=331,
+                            host=host).throughput_tok_s
+    gain = t_rep / t_max - 1
+    assert 0.10 < gain < 0.80, gain
+
+
+def test_slice_mesh():
+    from repro.core.replication import slice_mesh
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    subs = slice_mesh(mesh, 1)
+    assert len(subs) == 1

@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analysis import shape_bytes
+from repro.core.bca import BatchingConfigurationAdvisor
+from repro.core.perfmodel import ServingCurves, decode_step_terms
+from repro.core.hardware import TPU_V5E, H100_PAPER
+from repro.configs import get_config
+from repro.kvcache.paged import BlockManager
+from repro.kernels import ops, ref
+
+HW = [TPU_V5E, H100_PAPER]
+
+
+# ------------------------------------------------------------- roofline ---
+@given(b1=st.integers(1, 64), b2=st.integers(65, 1024),
+       ctx=st.integers(16, 4096), hw_i=st.integers(0, 1))
+@settings(max_examples=40, deadline=None)
+def test_attention_ai_constant_in_batch(b1, b2, ctx, hw_i):
+    """The paper's Fig. 1: attention arithmetic intensity is O(1) in batch,
+    matmul AI grows monotonically."""
+    cfg = get_config("opt-1.3b")
+    hw = HW[hw_i]
+    t1 = decode_step_terms(cfg, b1, ctx, hw)
+    t2 = decode_step_terms(cfg, b2, ctx, hw)
+    assert abs(t1.ai("attention") - t2.ai("attention")) < 1e-6
+    assert t2.ai("matmul") > t1.ai("matmul")
+
+
+@given(b=st.integers(1, 2048), ctx=st.integers(16, 4096))
+@settings(max_examples=40, deadline=None)
+def test_decode_stays_memory_bound(b, ctx):
+    """Paper's headline: decode attention never leaves the memory-bound
+    regime (AI << machine balance point) at ANY batch size."""
+    cfg = get_config("opt-2.7b")
+    hw = H100_PAPER
+    t = decode_step_terms(cfg, b, ctx, hw)
+    balance = hw.peak_flops / hw.hbm_bw
+    assert t.ai("attention") < balance
+    c = t.classes["attention"]
+    assert c["memory_s"] > c["compute_s"]
+
+
+# ------------------------------------------------------------------ BCA ---
+@st.composite
+def curves(draw):
+    n = draw(st.integers(4, 24))
+    batches = np.unique(draw(st.lists(st.integers(1, 1024), min_size=n,
+                                      max_size=n)))
+    batches.sort()
+    # throughput monotone-ish with plateau; latency increasing
+    t1 = draw(st.floats(10, 500))
+    knee = draw(st.integers(1, 512))
+    tput = t1 * batches / (1 + batches / knee)
+    itl = batches / tput
+    kv = batches / batches.max()
+    return ServingCurves(batches, tput, itl, kv)
+
+
+@given(c=curves(), slo_mult=st.floats(1.1, 10.0), eps=st.floats(0.01, 0.5))
+@settings(max_examples=60, deadline=None)
+def test_bca_respects_constraints(c, slo_mult, eps):
+    slo = float(c.itl_s.min()) * slo_mult
+    res = BatchingConfigurationAdvisor(c, slo_s=slo, eps=eps).solve()
+    # feasibility: if any batch satisfies both constraints, the chosen one
+    # must satisfy them and be throughput-maximal among feasible points
+    t1 = float(c.throughput[np.argmin(c.batches)])
+    feas = (c.itl_s <= slo) & (c.throughput / np.maximum(c.batches * t1,
+                                                         1e-12) > eps)
+    if feas.any():
+        i = list(c.batches).index(res.b_opt)
+        assert feas[i]
+        assert res.throughput >= c.throughput[feas].max() - 1e-9
+    assert res.b_opt in c.batches
+
+
+# ---------------------------------------------------------- block manager --
+@given(st.lists(st.tuples(st.integers(1, 200), st.booleans()), min_size=1,
+                max_size=60), st.integers(4, 64))
+@settings(max_examples=60, deadline=None)
+def test_block_manager_conservation(ops_list, block_size):
+    bm = BlockManager(num_blocks=256, block_size=block_size)
+    live = {}
+    for i, (tokens, release) in enumerate(ops_list):
+        if bm.can_allocate(tokens):
+            bm.allocate(i, tokens)
+            live[i] = bm.blocks_needed(tokens)
+        if release and live:
+            rid = next(iter(live))
+            bm.release(rid)
+            live.pop(rid)
+    # conservation: free + allocated == total, no double allocation
+    allocated = sum(len(v) for v in bm.tables.values())
+    assert len(bm.free) + allocated == 256
+    flat = [b for v in bm.tables.values() for b in v]
+    assert len(flat) == len(set(flat))
+
+
+# ------------------------------------------------------- kernel property ---
+@given(B=st.integers(1, 3), S=st.integers(8, 96), K=st.sampled_from([1, 2, 4]),
+       G=st.sampled_from([1, 2, 4]), hd=st.sampled_from([32, 64]),
+       seed=st.integers(0, 2**30))
+@settings(max_examples=25, deadline=None)
+def test_decode_kernel_property(B, S, K, G, hd, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    H = K * G
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    out = ops.decode_attention(q, k, v, lengths, block_s=32, interpret=True)
+    exp = ref.gqa_decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4,
+                               rtol=1e-3)
+    # output is a convex combination of values -> bounded by value range
+    vmax = float(jnp.abs(v).max())
+    assert float(jnp.abs(out).max()) <= vmax + 1e-4
+
+
+# --------------------------------------------------------- HLO byte parse --
+@given(st.sampled_from(["f32", "bf16", "s32", "pred"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+@settings(max_examples=40, deadline=None)
+def test_shape_bytes_parse(dt, dims):
+    n = int(np.prod(dims)) if dims else 1
+    per = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1}[dt]
+    s = f"{dt}[{','.join(map(str, dims))}]{{{','.join(map(str, range(len(dims))))}}}"
+    assert shape_bytes(s) == n * per

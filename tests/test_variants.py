@@ -1,0 +1,75 @@
+"""§Perf variant correctness: performance variants must be
+numerics-preserving (same function, different layout/schedule)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.launch.input_specs import SHAPES, adjusted_cfg, apply_variant
+from repro.models import model as M
+
+
+def _setup(name="internlm2-1.8b", seed=0):
+    cfg = reduced(get_config(name))
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    tok = jax.random.randint(key, (2, 24), 0, cfg.vocab_size)
+    return cfg, params, {"tokens": tok}
+
+
+def test_kv_repeat_preserves_forward(rules):
+    cfg, params, batch = _setup()
+    base, _ = M.forward(params, cfg, rules, batch)
+    cfg2 = dataclasses.replace(cfg, attn_kv_repeat=True)
+    var, _ = M.forward(params, cfg2, rules, batch)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(var),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_attn_row_parallel_preserves_forward(rules):
+    cfg, params, batch = _setup()
+    base, _ = M.forward(params, cfg, rules, batch)
+    cfg2 = dataclasses.replace(cfg, attn_row_parallel=True)
+    # same param SHAPES (only logical sharding axes differ)
+    sds_a = jax.tree.map(lambda s: s.shape, M.param_sds(cfg))
+    sds_b = jax.tree.map(lambda s: s.shape, M.param_sds(cfg2))
+    assert sds_a == sds_b
+    var, _ = M.forward(params, cfg2, rules, batch)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(var),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_apply_variant_table():
+    cfg = get_config("arctic-480b")
+    v = apply_variant(cfg, "head_pad64_kv_repeat")
+    assert v.n_heads == 64 and v.attn_kv_repeat
+    assert apply_variant(cfg, None) is cfg
+    with pytest.raises(ValueError):
+        apply_variant(cfg, "bogus")
+
+
+def test_adjusted_cfg_long500k_sliding_window():
+    shape = SHAPES["long_500k"]
+    dense = adjusted_cfg("phi3-mini-3.8b", shape)
+    assert dense.sliding_window == 8192
+    ssm = adjusted_cfg("mamba2-1.3b", shape)
+    assert ssm.sliding_window is None          # native sub-quadratic
+
+
+def test_padded_vocab_logits_masked(rules):
+    """Archs with non-divisible vocab get padded columns masked to -inf."""
+    cfg = dataclasses.replace(reduced(get_config("mamba2-1.3b")),
+                              vocab_size=500)   # padded_vocab = 512
+    assert cfg.padded_vocab == 512
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jnp.zeros((1, 8), jnp.int32)
+    logits, _ = M.forward(params, cfg, rules, {"tokens": tok})
+    assert logits.shape[-1] == 512
+    assert np.all(np.asarray(logits[..., 500:]) < -1e29)
+    # and decode surface slices them off
+    last, cache, _ = M.prefill(params, cfg, rules, {"tokens": tok},
+                               cache_len=12)
+    assert last.shape == (1, 500)
