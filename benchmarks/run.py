@@ -25,6 +25,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-engine", action="store_true",
                     help="skip the slow real-engine sweep")
+    ap.add_argument("--datapath", action="store_true",
+                    help="also run the decode data-path microbenchmark "
+                         "(gather-copy vs zero-copy paged)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import paper_claims as pc
@@ -61,6 +64,17 @@ def main() -> int:
         _run("engine_measured_curves", measured_curves,
              lambda o: f"plateau_observed={o['plateau_observed']};" +
              o["bca_on_measured"].replace(" ", "_"))
+
+    if args.datapath:
+        from benchmarks.decode_datapath import sweep
+
+        def _dp_derive(o):
+            sp = next((r["speedup"] for r in o["rows"]
+                       if r["batch"] >= 16), 0.0)
+            return (f"zero_copy_wins_at_16={o['zero_copy_wins_at_16']};"
+                    f"speedup_b16={sp:.2f}")
+
+        _run("decode_datapath", sweep, _dp_derive)
 
     # §Roofline aggregation from the dry-run artifacts, if present
     from benchmarks.roofline_table import load_records, summary

@@ -1,0 +1,69 @@
+"""Version tolerance for the JAX API surface this repo leans on.
+
+The codebase is written against the modern mesh API (``jax.make_mesh`` with
+``axis_types`` and the ``jax.set_mesh`` context manager). Older runtimes
+(e.g. jax 0.4.x, where ``jax.sharding.AxisType`` and ``jax.set_mesh`` do
+not exist yet) expose the same semantics through the legacy spellings, so
+everything mesh-related routes through this module instead of calling jax
+directly.
+
+Also hosts the Pallas-TPU compiler-params alias (``CompilerParams`` vs the
+older ``TPUCompilerParams``) used by the kernels package.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the runtime supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def use_mesh(mesh):
+    """Context manager that installs ``mesh`` as the ambient mesh.
+
+    Modern jax: ``jax.set_mesh``. Older jax: ``Mesh`` itself is the context
+    manager (the pjit resource-env form) — same effect for this codebase,
+    which only ever reads the mesh through ``ShardingRules``.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use = getattr(jax.sharding, "use_mesh", None)
+    if use is not None:
+        return use(mesh)
+    return contextlib.nullcontext(mesh) if mesh is None else mesh
+
+
+def pallas_tpu_compiler_params(pltpu, **kwargs):
+    """``pltpu.CompilerParams`` (new) or ``pltpu.TPUCompilerParams`` (old)."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map`` (old).
+
+    ``check_vma`` is the new name of the replication check (``check_rep``
+    before); both spellings are forwarded to whatever the runtime accepts.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

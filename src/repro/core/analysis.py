@@ -189,7 +189,7 @@ class HloCensus:
         # operand list is the prefix of `rest` up to the closing paren at
         # depth 0; operands are %names (types looked up) or literals.
         tab = self.symbols.get(comp, {})
-        depth, args, cur = 1, [], []
+        depth, bracket, args, cur = 1, 0, [], []
         for ch in instr.rest:
             if ch == "(":
                 depth += 1
@@ -197,7 +197,11 @@ class HloCensus:
                 depth -= 1
                 if depth == 0:
                     break
-            if ch == "," and depth == 1:
+            elif ch in "[{":
+                bracket += 1
+            elif ch in "]}":
+                bracket -= 1
+            if ch == "," and depth == 1 and bracket == 0:
                 args.append("".join(cur))
                 cur = []
             else:
@@ -206,6 +210,11 @@ class HloCensus:
         types = []
         for a in args:
             a = a.strip()
+            # older XLA prints typed operands ("f32[64,64]{1,0} %name");
+            # newer prints bare names ("%name") — handle both.
+            if _SHAPE_RE.match(a):
+                types.append(a)
+                continue
             m = re.match(r"%?([\w.\-]+)", a)
             if m and m.group(1) in tab:
                 types.append(tab[m.group(1)])

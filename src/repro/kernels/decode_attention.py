@@ -19,6 +19,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from repro import compat
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -96,7 +97,8 @@ def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((G, 1), jnp.float32),     # running denom l
             pltpu.VMEM((G, hd), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
+            pltpu,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths2d, qg, k, v)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: PAGED GQA decode attention.
+"""PAGED GQA decode attention: Pallas TPU kernel + block-table JAX path.
 
 vLLM's PagedAttention follows KV block pointers inside the CUDA kernel;
 the TPU-native equivalent drives the HBM->VMEM tile fetch through a
@@ -14,6 +14,14 @@ Layout:
 
 Grid: (B, K, nb_max) with the block axis innermost/sequential; online
 softmax state carried in VMEM scratch exactly like the contiguous kernel.
+
+``paged_gqa_decode_attention_jax`` is the same data flow expressed at the
+XLA level (a ``lax.scan`` over logical blocks with a per-block take +
+online softmax): the serving engine's zero-copy decode path on CPU/GPU,
+where Pallas-TPU is unavailable. Per scan step only one ``[B, BS, K, hd]``
+tile of the pool is gathered, so — like the kernel — it never materializes
+a dense ``[B, S_pad, K, hd]`` copy of the cache. ``paged_decode_attention``
+dispatches between the two by backend.
 """
 from __future__ import annotations
 
@@ -21,6 +29,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from repro import compat
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -101,9 +110,73 @@ def paged_gqa_decode_attention(q: jax.Array, k_pool: jax.Array,
         functools.partial(_paged_kernel, block_s=BS, scale=hd ** -0.5),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
+            pltpu,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32), qg,
       k_pool, v_pool)
     return out.reshape(B, H, hd)
+
+
+def paged_gqa_decode_attention_jax(q: jax.Array, k_pool: jax.Array,
+                                   v_pool: jax.Array, block_table: jax.Array,
+                                   lengths: jax.Array) -> jax.Array:
+    """Block-table decode attention in pure JAX (no dense gather).
+
+    Same contract as :func:`paged_gqa_decode_attention` — q: [B,H,hd];
+    k/v_pool: [NB,BS,K,hd]; block_table: [B,nb] int32; lengths: [B] int32
+    -> [B,H,hd] — but implemented as a ``lax.scan`` over logical block
+    index with an online-softmax carry. Each step gathers exactly one
+    [B, BS, K, hd] tile from the pool, so peak extra memory is one tile
+    per step instead of the full [B, nb*BS, K, hd] logical view.
+
+    Rows with length 0 (batch padding) produce zeros. Table entries past a
+    request's last block may point anywhere valid (e.g. a trash block):
+    their scores are fully masked by ``lengths``.
+    """
+    B, H, hd = q.shape
+    NB, BS, K, _ = k_pool.shape
+    nb = block_table.shape[1]
+    G = H // K
+    scale = hd ** -0.5
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    tbl = block_table.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+
+    def body(carry, i):
+        m_run, l_run, acc = carry
+        kb = jnp.take(k_pool, tbl[:, i], axis=0).astype(jnp.float32)
+        vb = jnp.take(v_pool, tbl[:, i], axis=0).astype(jnp.float32)
+        s = jnp.einsum("bkgh,bskh->bkgs", qg, kb) * scale     # [B,K,G,BS]
+        ids = i * BS + jnp.arange(BS)
+        valid = ids[None, :] < lens[:, None]                  # [B,BS]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        # explicit zero (not just exp underflow) so fully-masked rows —
+        # batch padding with length 0, where s == m_new == NEG_INF and
+        # exp(s - m_new) would be 1 — contribute nothing and output zeros.
+        p = jnp.where(valid[:, None, None, :],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = alpha * l_run + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgs,bskh->bkgh", p, vb)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((B, K, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, K, G), jnp.float32),
+            jnp.zeros((B, K, G, hd), jnp.float32))
+    (_, l_f, acc), _ = jax.lax.scan(body, init, jnp.arange(nb))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           lengths: jax.Array) -> jax.Array:
+    """Backend dispatch: Pallas kernel on TPU, block-scan JAX elsewhere."""
+    if jax.default_backend() == "tpu":
+        return paged_gqa_decode_attention(q, k_pool, v_pool, block_table,
+                                          lengths)
+    return paged_gqa_decode_attention_jax(q, k_pool, v_pool, block_table,
+                                          lengths)

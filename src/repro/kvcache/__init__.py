@@ -1,1 +1,2 @@
 from repro.kvcache.paged import BlockManager, PagedKVCache  # noqa
+from repro.kvcache.view import PagedCacheView  # noqa

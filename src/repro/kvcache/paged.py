@@ -2,9 +2,9 @@
 
 vLLM pages the KV cache with CUDA pointer chasing inside the attention
 kernel. TPUs have no in-kernel pointer chasing, so the TPU-native analogue
-is a *block-table gather*: physical KV blocks live in a pool tensor and a
-per-request block table drives a gather that materializes the request's
-logical view. Memory accounting (the thing BCA cares about) is identical
+drives addressing through a *block table*: physical KV blocks live in a
+pool tensor and a per-request table of block ids maps logical to physical
+positions. Memory accounting (the thing BCA cares about) is identical
 to vLLM's: allocation at block granularity, a free list, and admission
 control by free-block watermark.
 
@@ -12,17 +12,36 @@ The pool is generic over the model-cache pytree: attention K/V leaves
 (which carry a ``kv_seq`` logical axis) are paged; SSM state / cross-attn
 leaves are per-slot dense state (they are O(1) in sequence length, there
 is nothing to page).
+
+Two consumption modes:
+
+* **zero-copy** (:meth:`PagedKVCache.view`, the steady-state decode path):
+  a :class:`~repro.kvcache.view.PagedCacheView` referencing the pool
+  leaves directly plus device-resident block tables. The model runs
+  block-table attention against the pool in place and writes the new
+  token's K/V row at its physical (block, slot) — no ``[B, S_pad]``
+  materialization, no full-pytree write-back.
+* **gather/scatter** (:meth:`gather` + :meth:`scatter_new_token`, the
+  documented fallback): materializes a dense per-request copy. Kept for
+  sliding-window models (the ring-buffer layout is not paged) and as the
+  reference the equivalence tests compare against.
+
+One extra *trash* physical block (id ``num_blocks``) and one trash dense
+slot (id ``max_batch``) absorb the writes of batch-padding rows, so the
+engine can pad the running batch to power-of-two buckets without
+corrupting live state.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.kvcache.view import PagedCacheView
 from repro.models import model as model_lib
 from repro.models.params import ParamSpec
 from repro.sharding import KV_SEQ
@@ -38,6 +57,9 @@ class BlockManager:
         self.free: List[int] = list(range(num_blocks))
         self.tables: Dict[int, List[int]] = {}
         self.watermark_blocks = max(1, int(num_blocks * watermark))
+        # bumped on every table mutation; lets the pool cache device-side
+        # block tables and only re-upload when something actually changed
+        self.version = 0
 
     def blocks_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
@@ -52,17 +74,25 @@ class BlockManager:
             raise RuntimeError("KV pool exhausted")
         got = [self.free.pop() for _ in range(need)]
         self.tables.setdefault(req_id, []).extend(got)
+        self.version += 1
         return got
+
+    def needs_block(self, req_id: int, new_len: int) -> bool:
+        """Would extending req_id to new_len tokens require a new block?"""
+        return new_len > len(self.tables.get(req_id, ())) * self.block_size
 
     def append_token(self, req_id: int, new_len: int) -> Optional[int]:
         """Ensure capacity for new_len tokens; returns a new block or None."""
-        have = len(self.tables.get(req_id, ())) * self.block_size
-        if new_len > have:
+        if self.needs_block(req_id, new_len):
+            have = len(self.tables.get(req_id, ())) * self.block_size
             return self.allocate(req_id, new_len - have)[0]
         return None
 
     def release(self, req_id: int):
-        self.free.extend(self.tables.pop(req_id, []))
+        freed = self.tables.pop(req_id, [])
+        if freed:
+            self.free.extend(freed)
+            self.version += 1
 
     @property
     def used_fraction(self) -> float:
@@ -83,6 +113,12 @@ class PagedKVCache:
         self.num_blocks = num_blocks
         self.max_batch = max_batch
         self.manager = BlockManager(num_blocks, block_size)
+        # dense-state slot assignment for non-paged leaves (SSM state,
+        # cross-attn K/V); slot ``max_batch`` is the padding trash slot.
+        self._slots: Dict[int, int] = {}
+        self._free_slots: List[int] = list(range(max_batch))
+        self.trash_block = num_blocks          # physical block for padding
+        self.trash_slot = max_batch            # dense slot for padding
         # template with batch=1, kv_len=block_size gives per-leaf shapes
         template = model_lib.abstract_cache(cfg, 1, block_size)
         is_spec = lambda x: isinstance(x, ParamSpec)
@@ -94,11 +130,15 @@ class PagedKVCache:
 
         def mk(spec: ParamSpec, is_kv: bool, bdim: int):
             shape = list(spec.shape)
-            shape[bdim] = num_blocks if is_kv else max_batch
+            # +1: trash block / trash slot absorbing padding-row writes
+            shape[bdim] = num_blocks + 1 if is_kv else max_batch + 1
             return jnp.zeros(tuple(shape), spec.dtype)
 
         self.pool = jax.tree.map(mk, template, self._is_kv, self._bdim,
                                  is_leaf=is_spec)
+        # device block-table cache for the zero-copy view
+        self._dev_tables: Optional[jax.Array] = None
+        self._dev_tables_key: Optional[Tuple] = None
 
     # ------------------------------------------------------------------
     def gather(self, req_ids: Sequence[int], pad_blocks: int):
@@ -186,16 +226,53 @@ class PagedKVCache:
         self.pool = jax.tree.map(w, self.pool, cache_one, self._is_kv,
                                  self._bdim)
 
+    # ------------------------------------------------------- zero-copy --
+    def view(self, req_ids: Sequence[int], positions: Sequence[int],
+             nb_pad: int, batch_pad: int) -> PagedCacheView:
+        """Zero-copy :class:`PagedCacheView` over the pool for ``req_ids``.
+
+        ``positions[i]`` is the write position of request i's new token
+        this step. ``nb_pad``/``batch_pad`` are the bucketed table width /
+        batch size (the engine pads both to powers of two so the jit cache
+        stays small); padding rows address the trash block/slot and carry
+        length 0.
+
+        The ``[batch_pad, nb_pad]`` block-table upload is cached and only
+        rebuilt when the allocator state or the running set changes — in
+        steady-state decode (no admission, no block boundary crossed) the
+        per-step host->device traffic is three [B] vectors.
+        """
+        B = len(req_ids)
+        assert B <= batch_pad
+        key = (tuple(req_ids), nb_pad, batch_pad, self.manager.version)
+        if self._dev_tables_key != key:
+            table = np.full((batch_pad, nb_pad), self.trash_block, np.int32)
+            for i, rid in enumerate(req_ids):
+                blocks = self.manager.tables.get(rid, [])[:nb_pad]
+                table[i, :len(blocks)] = blocks
+            self._dev_tables = jnp.asarray(table)
+            self._dev_tables_key = key
+        pos = np.zeros((batch_pad,), np.int32)
+        pos[:B] = np.asarray(positions, np.int32)
+        lens = np.zeros((batch_pad,), np.int32)
+        lens[:B] = pos[:B] + 1
+        slots = np.full((batch_pad,), self.trash_slot, np.int32)
+        slots[:B] = [self._slot(rid) for rid in req_ids]
+        return PagedCacheView(self.pool, self._dev_tables,
+                              jnp.asarray(lens), jnp.asarray(pos),
+                              jnp.asarray(slots), self.block_size)
+
+    def commit(self, new_pool):
+        """Adopt the pool pytree returned by a zero-copy decode step."""
+        self.pool = new_pool
+
     # slot assignment for dense (non-paged) state leaves
     def _slot(self, rid: int) -> int:
-        if not hasattr(self, "_slots"):
-            self._slots: Dict[int, int] = {}
-            self._free_slots = list(range(self.max_batch))
         if rid not in self._slots:
             self._slots[rid] = self._free_slots.pop()
         return self._slots[rid]
 
     def release(self, rid: int):
         self.manager.release(rid)
-        if hasattr(self, "_slots") and rid in self._slots:
+        if rid in self._slots:
             self._free_slots.append(self._slots.pop(rid))

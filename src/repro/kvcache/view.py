@@ -1,0 +1,63 @@
+"""Zero-copy view of the paged KV pool.
+
+``PagedCacheView`` is what :class:`repro.kvcache.paged.PagedKVCache` hands
+the model for a decode step instead of a gathered ``[B, S_pad, ...]``
+copy: references to the physical pool pytree plus the device-resident
+indexing state (block tables, lengths, write positions, dense-state
+slots) needed to address it in place. It is a registered pytree, so the
+whole view flows through ``jax.jit`` without host round trips; the engine
+donates the pool leaves so the per-step K/V row writes alias the input
+buffers.
+
+The view deliberately carries no policy: which leaves are paged vs dense
+is decided structurally by the model's block plan (attention K/V leaves
+are paged; SSM state and cross-attention K/V are O(1)-per-request dense
+slots), so the model layer destructures ``pool`` exactly like a regular
+cache pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedCacheView:
+    """Device-resident addressing of a paged KV pool.
+
+    pool       mirrors the model cache pytree; attention K/V leaves are
+               ``[(L,) NB, BS, K, hd]`` physical blocks, dense-state
+               leaves are ``[(L,) max_batch+1, ...]`` slots.
+    tables     ``[B, nb]`` int32 — physical block id per logical block.
+               Width is bucketed (power of two) by the engine; entries
+               past a request's allocation point at the trash block.
+    lengths    ``[B]`` int32 — valid tokens per request *including* the
+               token written this step. 0 marks a batch-padding row.
+    positions  ``[B]`` int32 — write position of this step's new token.
+    slots      ``[B]`` int32 — dense-state slot per request (trash slot
+               for padding rows).
+    block_size tokens per physical block (static).
+    """
+    pool: Any
+    tables: jax.Array
+    lengths: jax.Array
+    positions: jax.Array
+    slots: jax.Array
+    block_size: int
+
+    def tree_flatten(self):
+        children = (self.pool, self.tables, self.lengths, self.positions,
+                    self.slots)
+        return children, (self.block_size,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        pool, tables, lengths, positions, slots = children
+        return cls(pool, tables, lengths, positions, slots, aux[0])
+
+    @property
+    def batch(self) -> int:
+        return self.tables.shape[0]

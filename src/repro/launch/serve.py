@@ -28,6 +28,7 @@ def main():
     args = ap.parse_args()
 
     import jax
+    from repro.compat import use_mesh
     from repro.configs import get_config, reduced
     from repro.core import (TPU_V5E, H100_PAPER, BatchingConfigurationAdvisor,
                             ReplicationPlanner, decode_curves, max_batch_for,
@@ -68,7 +69,7 @@ def main():
     rules = rules_for(mesh)
     params = init_params(cfg, jax.random.PRNGKey(0))
     model = Model(cfg, rules)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         ecfg = EngineConfig(max_batch=min(max_batch, 64),
                             kv_pool_tokens=1 << 16, max_model_len=512,
                             prefill_bucket=64)

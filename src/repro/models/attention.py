@@ -292,6 +292,50 @@ def self_attn_decode(p, x, cache_k, cache_v, cfg: ArchConfig,
     return out_project(p, o, cfg, rules), (cache_k, cache_v)
 
 
+def paged_self_attn_decode(p, x, k_pool, v_pool, cfg: ArchConfig,
+                           rules: ShardingRules, *, tables: jax.Array,
+                           lengths: jax.Array, positions: jax.Array,
+                           block_size: int):
+    """Single-token decode straight against the physical KV pool.
+
+    The zero-copy half of the engine's decode data path: instead of a
+    gathered ``[B, S_pad, K, hd]`` cache copy, this takes the pool's
+    physical blocks (``k_pool/v_pool: [NB, BS, K, hd]``, possibly the
+    layer-flattened ``[L*NB, ...]`` form with layer offsets pre-added to
+    ``tables``) plus per-request addressing:
+
+      tables    [B, nb] int32  physical block per logical block
+      lengths   [B]     int32  valid tokens incl. the one written now
+      positions [B]     int32  write position of the new token
+
+    The new K/V row is scattered into its physical (block, slot) — B rows
+    touched, not a pytree — and attention runs via the block-table kernel
+    (Pallas on TPU, block-scan JAX elsewhere). Returns
+    ``(out [B,1,D], (k_pool', v_pool'))`` with the row written in place
+    when the caller threads the pool through a donated jit / scan carry.
+
+    Sliding-window ring caches are not paged; the engine uses the gather
+    fallback for those configs.
+    """
+    from repro.kernels.paged_decode_attention import paged_decode_attention
+
+    B = x.shape[0]
+    q, k_new, v_new = qkv_project(p, x, cfg, rules, positions[:, None])
+    barange = jnp.arange(B)
+    phys = tables[barange, positions // block_size]
+    sib = positions % block_size
+    with jax.named_scope("kv_update"):
+        k_pool = k_pool.at[phys, sib].set(k_new[:, 0].astype(k_pool.dtype))
+        v_pool = v_pool.at[phys, sib].set(v_new[:, 0].astype(v_pool.dtype))
+    with jax.named_scope("attn_core"):
+        # pools are consumed at their storage dtype — the block-table
+        # kernels upcast per tile, so no whole-pool astype copy here
+        o = paged_decode_attention(q.reshape(B, cfg.n_heads, cfg.hd),
+                                   k_pool, v_pool, tables, lengths)
+    o = o.reshape(B, 1, -1).astype(x.dtype)
+    return out_project(p, o, cfg, rules), (k_pool, v_pool)
+
+
 def cross_attn_kv(p, img_embeds, cfg: ArchConfig, rules: ShardingRules):
     """Precompute cross-attention K/V from (stubbed) image embeddings."""
     with jax.named_scope("cross_kv"):

@@ -10,7 +10,10 @@ Public entry points (all pure functions of (params, cfg, rules, ...)):
   forward      — full-sequence logits (train / encoder)
   loss         — next-token (or frame-classification) CE + MoE aux loss
   prefill      — process a prompt, return last-position logits + cache
-  decode_step  — one autoregressive token against the cache (serve_step)
+  decode_step  — one autoregressive token against the cache (serve_step);
+                 given a PagedCacheView it runs the zero-copy paged path
+                 (block-table attention on the physical pool, in-place
+                 new-row writes, pool carried through the layer scan)
 """
 from __future__ import annotations
 
@@ -313,6 +316,126 @@ def _stack_decode(params, cache, x, cfg, rules, *, pos, lengths,
     return x, {"stack": new_stack, "rem": new_rem}
 
 
+def _flatten_lead(leaf):
+    """[L, N, ...] -> [L*N, ...] (free reshape: leading dims contiguous)."""
+    return leaf.reshape((leaf.shape[0] * leaf.shape[1],) + leaf.shape[2:])
+
+
+def block_apply_decode_paged(kind: str, bp, x, entry, cfg: ArchConfig,
+                             rules: ShardingRules, *, view, layer,
+                             n_phys: int, n_slots: int, shared,
+                             capacity_factor: float):
+    """One block's decode step addressing the pool in place.
+
+    ``entry`` holds this block's pool leaves with the (layer, block/slot)
+    leading dims flattened to one (``[L*N, ...]``, or ``[N, ...]`` with
+    ``layer == 0`` for unstacked remainder blocks), so the layer scan
+    never slices a pool leaf — addressing is table/slot + ``layer * N``.
+    Returns ``(x, entry')`` with writes applied via B-row scatters.
+    """
+    if kind == SSM:
+        idx = layer * n_slots + view.slots
+        state = {"h": jnp.take(entry["h"], idx, axis=0),
+                 "conv": jnp.take(entry["conv"], idx, axis=0)}
+        h, new_state = ssm_mod.ssm_decode(bp["ssm"],
+                                          norm_apply(bp["ln1"], x, cfg),
+                                          state, cfg, rules)
+        entry = {"h": entry["h"].at[idx].set(
+                     new_state["h"].astype(entry["h"].dtype)),
+                 "conv": entry["conv"].at[idx].set(
+                     new_state["conv"].astype(entry["conv"].dtype))}
+        return x + h, entry
+    if kind == SHARED_ATTN:
+        bp = shared
+    if kind == CROSS:
+        idx = layer * n_slots + view.slots
+        h = attn_mod.cross_attn_apply(
+            bp["attn"], norm_apply(bp["ln1"], x, cfg),
+            jnp.take(entry["k"], idx, axis=0).astype(x.dtype),
+            jnp.take(entry["v"], idx, axis=0).astype(x.dtype), cfg, rules)
+        x = x + h
+        f, _ = _ffn_apply(bp["ffn"], norm_apply(bp["ln2"], x, cfg), cfg,
+                          rules, capacity_factor)
+        return x + f, entry
+    h, (pk, pv) = attn_mod.paged_self_attn_decode(
+        bp["attn"], norm_apply(bp["ln1"], x, cfg), entry["k"], entry["v"],
+        cfg, rules, tables=layer * n_phys + view.tables,
+        lengths=view.lengths, positions=view.positions,
+        block_size=view.block_size)
+    x = x + h
+    f, _ = _ffn_apply(bp["ffn"], norm_apply(bp["ln2"], x, cfg), cfg, rules,
+                      capacity_factor)
+    return x + f, {"k": pk, "v": pv}
+
+
+def _stack_decode_paged(params, view, x, cfg: ArchConfig,
+                        rules: ShardingRules, *, capacity_factor):
+    """Zero-copy decode over the whole stack.
+
+    The physical pool rides in the ``lax.scan`` *carry* (flattened as
+    ``[L*N, ...]``) rather than as per-layer xs/ys: xs/ys would force XLA
+    to copy every pool leaf once per layer, while carry updates lower to
+    in-place while-loop buffer reuse. Each layer reads only the tiles its
+    block tables name and scatters back exactly B new-token rows.
+    """
+    if cfg.sliding_window:
+        raise NotImplementedError(
+            "paged decode has no ring-buffer masking; sliding-window "
+            "configs must use the gather path (the engine selects it "
+            "automatically)")
+    slots, n_rep, _ = plan_structure(cfg)
+    plan = cfg.block_plan()
+    shared = params.get("shared")
+    pool = view.pool
+
+    if n_rep > 0:
+        dims = []            # per-slot (n_phys, n_slots) of the stacked pool
+        flat = []
+        for j, kind in enumerate(slots):
+            entry = pool["stack"][j]
+            np_, ns_ = 1, 1
+            for key, leaf in entry.items():
+                if kind in (ATTN, SHARED_ATTN) and key in ("k", "v"):
+                    np_ = leaf.shape[1]
+                else:
+                    ns_ = leaf.shape[1]
+            dims.append((np_, ns_))
+            flat.append(jax.tree.map(_flatten_lead, entry))
+
+        def period_body(carry, xs):
+            x, flats = carry
+            slot_params, layer = xs
+            new = []
+            for j, kind in enumerate(slots):
+                x, e = block_apply_decode_paged(
+                    kind, slot_params[j], x, flats[j], cfg, rules,
+                    view=view, layer=layer, n_phys=dims[j][0],
+                    n_slots=dims[j][1], shared=shared,
+                    capacity_factor=capacity_factor)
+                new.append(e)
+            return (x, new), None
+
+        (x, flat), _ = jax.lax.scan(
+            period_body, (x, flat),
+            (tuple(params["stack"]), jnp.arange(n_rep)))
+        new_stack = [
+            jax.tree.map(lambda f, o: f.reshape(o.shape), fe, oe)
+            for fe, oe in zip(flat, pool["stack"])]
+    else:
+        new_stack = []
+
+    new_rem = []
+    rem_plan = plan[n_rep * len(slots):]
+    for bp, entry, kind in zip(params["rem"], pool["rem"], rem_plan):
+        x, e = block_apply_decode_paged(
+            kind, bp, x, entry, cfg, rules, view=view, layer=0,
+            n_phys=1, n_slots=1, shared=shared,
+            capacity_factor=capacity_factor)
+        new_rem.append(e)
+    x = norm_apply(params["final_norm"], x, cfg)
+    return x, {"stack": new_stack, "rem": new_rem}
+
+
 # ----------------------------------------------------------- public API ----
 def forward(params, cfg: ArchConfig, rules: ShardingRules,
             batch: Dict) -> Tuple[jax.Array, jax.Array]:
@@ -411,14 +534,9 @@ def _finalize_prefill_cache(cache, cfg: ArchConfig, S: int,
     return out
 
 
-def decode_step(params, cfg: ArchConfig, rules: ShardingRules, cache,
-                tokens, pos, lengths: Optional[jax.Array] = None,
-                embeds: Optional[jax.Array] = None):
-    """One token for every sequence in the batch (the paper's decode phase).
-
-    tokens: [B] int32 (or embeds [B,1,D]); pos: scalar int32 position.
-    Returns (logits [B,V], new_cache).
-    """
+def _decode_embed(params, cfg: ArchConfig, rules: ShardingRules, tokens,
+                  pos, embeds):
+    """Embed one decode token per sequence; pos may be scalar or [B]."""
     pos = jnp.asarray(pos, jnp.int32)
     if embeds is not None:
         x = embeds.astype(cfg.activation_dtype)
@@ -429,7 +547,37 @@ def decode_step(params, cfg: ArchConfig, rules: ShardingRules, cache,
             pe = jnp.take(params["embed"]["pos"],
                           pos.reshape(-1), axis=0).astype(x.dtype)
             x = x + (pe[:, None, :] if pos.ndim else pe[None])
-    x = constrain(x, rules, (BATCH, SEQ, D_MODEL))
+    return constrain(x, rules, (BATCH, SEQ, D_MODEL))
+
+
+def decode_step(params, cfg: ArchConfig, rules: ShardingRules, cache,
+                tokens, pos, lengths: Optional[jax.Array] = None,
+                embeds: Optional[jax.Array] = None):
+    """One token for every sequence in the batch (the paper's decode phase).
+
+    tokens: [B] int32 (or embeds [B,1,D]); pos: scalar int32 position (or
+    [B] vector for continuous batching).
+    Returns (logits [B,V], new_cache).
+
+    When ``cache`` is a :class:`repro.kvcache.view.PagedCacheView` the
+    step runs the zero-copy paged path: attention addresses the physical
+    KV pool through block tables (no dense per-request cache copy) and
+    ``new_cache`` is the updated *pool pytree* (to be committed back via
+    ``PagedKVCache.commit``). ``pos``/``lengths`` are taken from the view.
+    """
+    # local import: kvcache.paged imports this module for abstract_cache,
+    # so the view type is resolved lazily to keep imports acyclic
+    from repro.kvcache.view import PagedCacheView
+    if isinstance(cache, PagedCacheView):
+        x = _decode_embed(params, cfg, rules, tokens, cache.positions,
+                          embeds)
+        x, new_pool = _stack_decode_paged(
+            params, cache, x, cfg, rules,
+            capacity_factor=cfg.serve_capacity_factor)
+        logits = unembed_apply(params["embed"], x, cfg, rules)[:, 0]
+        return logits[:, :cfg.vocab_size], new_pool
+    pos = jnp.asarray(pos, jnp.int32)
+    x = _decode_embed(params, cfg, rules, tokens, pos, embeds)
     x, cache = _stack_decode(params, cache, x, cfg, rules, pos=pos,
                              lengths=lengths,
                              capacity_factor=cfg.serve_capacity_factor)

@@ -6,6 +6,26 @@ and free KV blocks (paged pool watermark) — then executes one batched
 decode step for every running request at its own position. Prefill runs
 per admitted request in padded length buckets (jit-cache friendly).
 
+Decode data path (the paper's memory-bound hot loop) has two modes:
+
+* ``paged`` (default) — **zero-copy**: one jitted step consumes a
+  :class:`~repro.kvcache.view.PagedCacheView` (pool references + device
+  block tables), attention reads the physical KV blocks in place via the
+  block-table kernel, the new token's K/V row is scattered to its
+  physical (block, slot) inside the jit, and the pool buffers are donated
+  so the update aliases the input. Per-step host→device traffic is three
+  ``[B]`` vectors (plus a table re-upload only when the allocator state
+  changes). Batch size and table width are padded to power-of-two buckets
+  so the jit cache stays O(log) in both.
+* ``gather`` — the legacy fallback: materialize a dense ``[B, S_pad]``
+  cache copy per step, decode against it, scatter the new rows back.
+  Kept for sliding-window configs (ring caches aren't paged) and as the
+  reference the path-equivalence tests compare against.
+
+If the pool runs out of blocks mid-decode, the engine preempts (requeues)
+the youngest running requests — recompute-style, like vLLM — instead of
+crashing; deterministic greedy decode regenerates identical tokens.
+
 The engine is the *measured-curves* source for BCA: sweeping ``max_batch``
 on a fixed workload yields T(B)/L(B)/KV(B) exactly like the paper's
 online-mode evaluation (Sec. IV), with real compute on CPU for reduced
@@ -25,6 +45,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.kvcache.paged import PagedKVCache
+from repro.kvcache.view import PagedCacheView
 from repro.models.model import Model
 from repro.serving.metrics import ServingMetrics, collect
 from repro.serving.workload import Request
@@ -37,10 +58,20 @@ class EngineConfig:
     kv_pool_tokens: int = 8192          # total KV token capacity
     max_model_len: int = 1024
     prefill_bucket: int = 64            # pad prompts to multiples of this
+    # "paged" = zero-copy block-table decode (default);
+    # "gather" = legacy dense-copy fallback (forced for sliding windows)
+    decode_mode: str = "paged"
 
 
 def _bucket(n: int, b: int) -> int:
     return max(b, ((n + b - 1) // b) * b)
+
+
+def _pow2_bucket(n: int, lo: int = 1) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
 
 
 class ContinuousBatchingEngine:
@@ -53,6 +84,13 @@ class ContinuousBatchingEngine:
         self.pool = PagedKVCache(self.cfg, num_blocks=nb,
                                  block_size=ecfg.block_size,
                                  max_batch=ecfg.max_batch)
+        if ecfg.decode_mode not in ("paged", "gather"):
+            raise ValueError(
+                f"decode_mode must be 'paged' or 'gather', "
+                f"got {ecfg.decode_mode!r}")
+        # ring caches (sliding window) aren't paged — fall back to gather
+        self.decode_mode = ("gather" if self.cfg.sliding_window
+                            else ecfg.decode_mode)
         self.waiting: deque = deque()
         self.running: List[Request] = []
         self._tokens: Dict[int, int] = {}        # rid -> next input token
@@ -61,10 +99,18 @@ class ContinuousBatchingEngine:
             partial(_prefill_fn, self.model),
             static_argnames=("cache_len",))
         self._decode_jit = jax.jit(partial(_decode_fn, self.model))
+        # zero-copy step: the pool pytree (arg 1) is donated so the K/V
+        # row scatters alias the input buffers; CPU has no buffer
+        # donation, so skip it there to avoid per-compile warnings
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._paged_jit = jax.jit(
+            partial(_paged_decode_fn, self.model, self.pool.block_size),
+            donate_argnums=donate)
         # telemetry
         self.itl_samples: List[float] = []
         self.batch_samples: List[int] = []
         self.max_kv_fraction = 0.0
+        self.preemptions = 0
 
     # ------------------------------------------------------------- admin --
     def add_request(self, req: Request):
@@ -100,6 +146,39 @@ class ContinuousBatchingEngine:
         req.generated = 1       # prefill produced the first output token
         req.output_tokens.append(tok)
 
+    # -------------------------------------------------------- preemption --
+    def _preempt(self, req: Request):
+        """Recompute-style preemption: release everything, requeue first."""
+        rid = req.req_id
+        self.pool.release(rid)
+        self._tokens.pop(rid, None)
+        self._pos.pop(rid, None)
+        req.output_tokens = []
+        req.generated = 0
+        req.t_first_token = None
+        self.waiting.appendleft(req)
+        self.preemptions += 1
+
+    def _ensure_step_capacity(self):
+        """Make sure every running request can take this step's token.
+
+        ``BlockManager.append_token`` bypasses the admission watermark, so
+        a request crossing a block boundary with an empty free list used
+        to raise mid-step. Instead: preempt the *youngest* running
+        requests (their blocks free immediately) until the survivors fit.
+        """
+        mgr = self.pool.manager
+        while True:
+            need = sum(1 for r in self.running
+                       if mgr.needs_block(r.req_id, self._pos[r.req_id] + 1))
+            if need <= len(mgr.free):
+                return
+            if len(self.running) <= 1:
+                raise RuntimeError(
+                    "KV pool exhausted: a single request exceeds pool "
+                    "capacity (raise kv_pool_tokens or lower max_model_len)")
+            self._preempt(self.running.pop())
+
     # -------------------------------------------------------------- step --
     def step(self, now: float) -> bool:
         """One engine iteration. Returns False when fully idle."""
@@ -107,21 +186,16 @@ class ContinuousBatchingEngine:
         if not self.running:
             return bool(self.waiting)
         t0 = time.perf_counter()
-        reqs = self.running
+        self._ensure_step_capacity()
+        reqs = self.running                    # preemption may have shrunk it
         rids = [r.req_id for r in reqs]
         # ensure capacity for the token being written this step
         for rid in rids:
             self.pool.manager.append_token(rid, self._pos[rid] + 1)
-        max_pos = max(self._pos[rid] for rid in rids)
-        pad_blocks = self.pool.manager.blocks_needed(
-            _bucket(max_pos + 1, self.ecfg.block_size * 4))
-        view = self.pool.gather(rids, pad_blocks)
-        tokens = jnp.asarray([self._tokens[rid] for rid in rids], jnp.int32)
-        pos = jnp.asarray([self._pos[rid] for rid in rids], jnp.int32)
-        logits, new_cache = self._decode_jit(self.params, view, tokens, pos)
-        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
-        self.pool.scatter_new_token(rids, [self._pos[r] for r in rids],
-                                    new_cache)
+        if self.decode_mode == "paged":
+            next_tokens = self._decode_paged(rids)
+        else:
+            next_tokens = self._decode_gather(rids)
         dt = time.perf_counter() - t0
         self.itl_samples.append(dt)
         self.batch_samples.append(len(reqs))
@@ -148,6 +222,36 @@ class ContinuousBatchingEngine:
         self.running = still
         return True
 
+    # ------------------------------------------------------ decode paths --
+    def _decode_paged(self, rids: List[int]) -> np.ndarray:
+        """Zero-copy step: block-table attention directly on the pool."""
+        B = len(rids)
+        positions = [self._pos[rid] for rid in rids]
+        max_blocks = max(len(self.pool.manager.tables[rid]) for rid in rids)
+        nb_pad = _pow2_bucket(max_blocks, lo=4)
+        batch_pad = _pow2_bucket(B)
+        view = self.pool.view(rids, positions, nb_pad, batch_pad)
+        tokens = np.zeros((batch_pad,), np.int32)
+        tokens[:B] = [self._tokens[rid] for rid in rids]
+        next_tokens, new_pool = self._paged_jit(
+            self.params, view.pool, view.tables, view.lengths,
+            view.positions, view.slots, jnp.asarray(tokens))
+        self.pool.commit(new_pool)
+        return np.asarray(next_tokens)[:B]
+
+    def _decode_gather(self, rids: List[int]) -> np.ndarray:
+        """Legacy dense-copy step (documented fallback)."""
+        max_pos = max(self._pos[rid] for rid in rids)
+        pad_blocks = self.pool.manager.blocks_needed(
+            _bucket(max_pos + 1, self.ecfg.block_size * 4))
+        view = self.pool.gather(rids, pad_blocks)
+        tokens = jnp.asarray([self._tokens[rid] for rid in rids], jnp.int32)
+        pos = jnp.asarray([self._pos[rid] for rid in rids], jnp.int32)
+        logits, new_cache = self._decode_jit(self.params, view, tokens, pos)
+        self.pool.scatter_new_token(rids, [self._pos[r] for r in rids],
+                                    new_cache)
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
     # --------------------------------------------------------------- run --
     def run(self, requests: List[Request]) -> ServingMetrics:
         for r in requests:
@@ -170,3 +274,18 @@ def _prefill_fn(model: Model, params, batch, cache_len: int):
 
 def _decode_fn(model: Model, params, view, tokens, pos):
     return model.decode_step(params, view, tokens, pos, lengths=pos + 1)
+
+
+def _paged_decode_fn(model: Model, block_size: int, params, pool, tables,
+                     lengths, positions, slots, tokens):
+    """One fused zero-copy decode step (jitted; ``pool`` donated).
+
+    Rebuilds the view from its pytree parts (jit-friendly), runs the
+    block-table decode, and returns (next_tokens [B], new_pool) — argmax
+    happens on device so only B token ids cross back to the host.
+    """
+    view = PagedCacheView(pool, tables, lengths, positions, slots,
+                          block_size)
+    logits, new_pool = model.decode_step(params, view, tokens, positions,
+                                         lengths=lengths)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_pool

@@ -1,13 +1,14 @@
 import jax
 import pytest
 
+from repro.compat import make_mesh, use_mesh
+
 
 @pytest.fixture(scope="session")
 def mesh():
     """1x1 mesh with production axis names (smoke tests see 1 device —
     the 512-device override belongs ONLY to launch/dryrun.py)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="session")
@@ -18,5 +19,5 @@ def rules(mesh):
 
 @pytest.fixture(autouse=True)
 def _use_mesh(mesh):
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         yield

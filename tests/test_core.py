@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.core import (H100_PAPER, TPU_V5E, BatchingConfigurationAdvisor,
                         HloCensus, ReplicationPlanner, decode_curves,
@@ -101,7 +102,6 @@ def test_replication_gain_matches_paper_band():
 
 def test_slice_mesh():
     from repro.core.replication import slice_mesh
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     subs = slice_mesh(mesh, 1)
     assert len(subs) == 1

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.configs import get_config, reduced
 from repro.models import model as M
 from repro.models import ssm as ssm_mod
@@ -52,8 +53,7 @@ def test_checkpoint_roundtrip(tmp_path, rules):
 
 
 def test_sharding_divisibility_fallback():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = rules_for(mesh)
     # 1-device mesh: everything falls back to size-1 axes w/o error
     spec = rules.spec(("batch", "kv_seq", "kv_heads", None), (8, 64, 2, 64))
@@ -61,8 +61,7 @@ def test_sharding_divisibility_fallback():
 
 
 def test_sharding_no_duplicate_axes():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = rules_for(mesh)
     spec = rules.spec(("d_model", "d_ff"), (64, 64))
     used = [s for s in spec if s is not None]
