@@ -2,6 +2,10 @@
 
     profile T(B)/L(B) -> BCA (Eq. 2) -> replication plan -> serve
 
+With ``--replicas`` > 1 (or ``auto``) the launcher actually runs the
+replicated cluster (serving.cluster) instead of a single engine, routing
+requests with ``--policy``.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch opt-1.3b --reduced \
       --requests 24 --bca --replicas auto
@@ -24,6 +28,10 @@ def main():
     ap.add_argument("--eps", type=float, default=0.1)
     ap.add_argument("--replicas", default="1",
                     help="'auto' = ReplicationPlanner decides")
+    ap.add_argument("--policy", default="round-robin",
+                    choices=("round-robin", "jsq", "least-kv"))
+    ap.add_argument("--cluster-mode", default="thread",
+                    choices=("thread", "sync"))
     ap.add_argument("--ctx", type=int, default=331)
     args = ap.parse_args()
 
@@ -62,6 +70,7 @@ def main():
             print(f"[sim] {r.summary()}")
     else:
         n_rep = int(args.replicas)
+    n_rep = max(1, min(n_rep, 8))       # CPU-container sanity cap
 
     # real engine run (reduced config on CPU)
     cfg = reduced(full_cfg) if args.reduced else full_cfg
@@ -70,12 +79,22 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0))
     model = Model(cfg, rules)
     with use_mesh(mesh):
+        # a fixed KV budget stands in for HBM: replicas split it evenly
+        budget = 1 << 16
         ecfg = EngineConfig(max_batch=min(max_batch, 64),
-                            kv_pool_tokens=1 << 16, max_model_len=512,
-                            prefill_bucket=64)
-        engine = ContinuousBatchingEngine(model, params, ecfg)
+                            kv_pool_tokens=(budget // n_rep) // 64 * 64,
+                            max_model_len=512, prefill_bucket=64)
         reqs = sharegpt_like(args.requests, cfg.vocab_size, seed=0,
                              mean_in=24, mean_out=32, max_len=256)
+        if n_rep > 1:
+            from repro.serving import ReplicatedCluster
+            cluster = ReplicatedCluster.colocated(
+                model, params, ecfg, n_rep, policy=args.policy,
+                mode=args.cluster_mode)
+            metrics = cluster.run(reqs)
+            print(metrics.summary())
+            return
+        engine = ContinuousBatchingEngine(model, params, ecfg)
         metrics = engine.run(reqs)
     print(f"[engine] {metrics.row()}")
 

@@ -1,3 +1,6 @@
-from repro.serving.engine import ContinuousBatchingEngine, EngineConfig  # noqa
-from repro.serving.workload import sharegpt_like, Request  # noqa
-from repro.serving.metrics import ServingMetrics  # noqa
+from repro.serving.engine import (ContinuousBatchingEngine, EngineConfig,  # noqa
+                                  StepFunctions)
+from repro.serving.workload import (Request, arrival_times, sharegpt_like)  # noqa
+from repro.serving.metrics import Percentiles, ServingMetrics  # noqa
+from repro.serving.cluster import (ClusterMetrics, ReplicatedCluster,  # noqa
+                                   autoscale)

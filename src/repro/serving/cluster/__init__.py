@@ -1,0 +1,12 @@
+"""Replicated serving subsystem: R continuous-batching engine replicas
+(each with its own BCA-sized KV pool, optionally pinned to a mesh slice)
+behind a shared router, with aggregated cluster metrics and an autoscaler
+that closes the measured-curves -> BCA -> replication loop (Sec. VI-B)."""
+from repro.serving.cluster.autoscale import (AutoscaleDecision, autoscale,  # noqa
+                                             decide, measure_curves)
+from repro.serving.cluster.cluster import Replica, ReplicatedCluster  # noqa
+from repro.serving.cluster.metrics import (ClusterMetrics, ReplicaStats,  # noqa
+                                           aggregate)
+from repro.serving.cluster.router import (POLICIES, JoinShortestQueue,  # noqa
+                                          LeastKVLoad, RoundRobin, Router,
+                                          RouterPolicy, make_policy)

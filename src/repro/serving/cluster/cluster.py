@@ -1,0 +1,278 @@
+"""Replicated serving: R continuous-batching engines behind one frontend.
+
+The paper's headline payoff (Sec. VI-B) is that the KV memory BCA frees
+can host *concurrent model replicas* that lift aggregate throughput. On
+the H100 the paper co-locates replicas with NVIDIA MPS (kernel-level time
+sharing); TPUs don't time-share kernels, so the TPU-idiomatic equivalent
+(already sketched in :mod:`repro.core.replication`) is *spatial*: slice
+the device mesh into R disjoint sub-meshes and run one independent
+replica — own params copy, own BCA-sized KV pool — per slice, with a
+router sharding requests across them.
+
+Two replica placements:
+
+* :meth:`ReplicatedCluster.sliced` — one replica per ``slice_mesh``
+  sub-mesh (params ``device_put`` onto each slice). This is the
+  production shape and what ``benchmarks/replication_throughput.py``
+  measures against the single full-mesh MAX-batch replica.
+* :meth:`ReplicatedCluster.colocated` — R replicas sharing one mesh and
+  one params buffer (the MPS-style degenerate case, and the cheap shape
+  for tests). Co-located replicas share a single compiled
+  :class:`~repro.serving.engine.StepFunctions` bundle so the host
+  compiles each (batch, table) bucket once, not R times.
+
+Two stepping modes:
+
+* ``"thread"`` — one host thread per replica, so one replica's Python
+  scheduling overlaps another's XLA compute (the GIL is released during
+  execution) and sliced replicas genuinely run concurrently. The main
+  thread feeds arrivals by wall clock through the router.
+* ``"sync"``  — single-threaded round-robin stepping with fast-forwarded
+  idle time. For offline (simultaneous-arrival) workloads this is fully
+  deterministic: routing order is fixed and, with greedy decode, a
+  1-replica sync cluster is token-for-token identical to the bare engine
+  — the equivalence test anchoring the whole subsystem. (With *timed*
+  arrivals, dispatch rounds still follow the wall clock, so a load-aware
+  policy's choices can vary with real step durations.)
+
+Per-replica isolation is structural: every engine owns its pool,
+allocator, slot map, and preemption counter (there is no module-level
+serving state), so one replica preempting under memory pressure cannot
+perturb another — ``tests/test_cluster.py`` pins this down.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, List, Optional, Sequence, Union
+
+from repro.compat import use_mesh
+from repro.serving.cluster.metrics import (ClusterMetrics, ReplicaStats,
+                                           aggregate)
+from repro.serving.cluster.router import Router, RouterPolicy
+from repro.serving.engine import (ContinuousBatchingEngine, EngineConfig,
+                                  StepFunctions)
+from repro.serving.metrics import collect
+from repro.serving.workload import Request
+
+
+@dataclasses.dataclass
+class Replica:
+    """One engine plus its placement and the requests routed to it."""
+    idx: int
+    engine: ContinuousBatchingEngine
+    mesh: Optional[object] = None          # sub-mesh when spatially sliced
+    requests: List[Request] = dataclasses.field(default_factory=list)
+
+    # --- load view read by router policies (see cluster.router) ---
+    @property
+    def queue_depth(self) -> int:
+        return len(self.engine.waiting)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self.engine.running)
+
+    @property
+    def load(self) -> int:
+        return self.queue_depth + self.in_flight
+
+    @property
+    def kv_load(self) -> float:
+        return self.engine.pool.manager.used_fraction
+
+    def mesh_ctx(self):
+        return use_mesh(self.mesh) if self.mesh is not None \
+            else contextlib.nullcontext()
+
+
+class ReplicatedCluster:
+    """R independent engines, a request router, and a cluster scheduler."""
+
+    MODES = ("thread", "sync")
+
+    def __init__(self, engines: Sequence[ContinuousBatchingEngine], *,
+                 meshes: Optional[Sequence] = None,
+                 policy: Union[str, RouterPolicy] = "round-robin",
+                 mode: str = "thread"):
+        if not engines:
+            raise ValueError("a cluster needs at least one engine")
+        if mode not in self.MODES:
+            raise ValueError(f"mode must be one of {self.MODES}, "
+                             f"got {mode!r}")
+        if meshes is not None and len(meshes) != len(engines):
+            raise ValueError(f"{len(meshes)} meshes for "
+                             f"{len(engines)} engines")
+        self.replicas = [
+            Replica(i, eng, meshes[i] if meshes is not None else None)
+            for i, eng in enumerate(engines)]
+        self.router = Router(policy, len(engines))
+        self.mode = mode
+        self.queue_samples: List[List[int]] = []
+        self._feeding_done = False
+        self._errors: List[BaseException] = []
+
+    # ---------------------------------------------------------- builders --
+    @classmethod
+    def colocated(cls, model, params, ecfg: EngineConfig, n_replicas: int,
+                  **kw) -> "ReplicatedCluster":
+        """R replicas sharing one mesh, one params buffer, and one
+        compiled step bundle (each still owns its KV pool/allocator)."""
+        steps = StepFunctions.build(model, ecfg.block_size)
+        engines = [ContinuousBatchingEngine(model, params, ecfg, steps=steps)
+                   for _ in range(n_replicas)]
+        return cls(engines, **kw)
+
+    @classmethod
+    def sliced(cls, cfg, params, ecfg: EngineConfig, mesh, n_replicas: int,
+               **kw) -> "ReplicatedCluster":
+        """One replica per disjoint sub-mesh of ``mesh`` (leading data
+        axis split R ways), params replicated onto each slice."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        from repro.core.replication import slice_mesh
+        from repro.models.model import Model
+        from repro.sharding import rules_for
+
+        engines, subs = [], slice_mesh(mesh, n_replicas)
+        for sub in subs:
+            replica_params = jax.device_put(
+                params, NamedSharding(sub, PartitionSpec()))
+            engines.append(ContinuousBatchingEngine(
+                Model(cfg, rules_for(sub)), replica_params, ecfg))
+        return cls(engines, meshes=subs, **kw)
+
+    # ------------------------------------------------------------- admin --
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    def reset_stats(self):
+        """Clear telemetry and routed-request lists (e.g. after warmup)."""
+        for rep in self.replicas:
+            rep.engine.reset_stats()
+            rep.requests = []
+        self.router.reset()
+        self.queue_samples = []
+
+    def _sample_queues(self):
+        self.queue_samples.append([rep.queue_depth for rep in self.replicas])
+
+    def _dispatch(self, pending: deque, now: float):
+        while pending and pending[0].arrival_s <= now:
+            req = pending.popleft()
+            rep = self.replicas[self.router.route(req, self.replicas)]
+            rep.requests.append(req)
+            rep.engine.add_request(req)
+
+    # --------------------------------------------------------------- run --
+    def run(self, requests: Sequence[Request]) -> ClusterMetrics:
+        """Serve ``requests`` to completion and return aggregate metrics.
+
+        Requests are routed at their arrival time (so queue-aware policies
+        see live load, not the t=0 snapshot). Telemetry accumulates across
+        runs like the engine's — call :meth:`reset_stats` after a warmup.
+        """
+        pending = deque(sorted(requests, key=lambda r: r.arrival_s))
+        t0 = time.perf_counter()
+        clock = lambda: time.perf_counter() - t0          # noqa: E731
+        for rep in self.replicas:
+            rep.engine.clock = clock
+        if self.mode == "sync":
+            self._run_sync(pending, clock)
+        else:
+            self._run_threaded(pending, clock)
+        wall = clock()
+        return self._collect(requests, wall)
+
+    def _run_sync(self, pending: deque, clock: Callable[[], float]):
+        """Single-threaded interleaving: route, then step each busy
+        replica once per round. Idle gaps before the next arrival are
+        fast-forwarded instead of slept through. Deterministic whenever
+        every request is pending from t=0 (offline workloads); timed
+        arrivals are dispatched against the wall clock."""
+        now = 0.0
+        while pending or any(r.engine.waiting or r.engine.running
+                             for r in self.replicas):
+            if pending and not any(r.engine.waiting or r.engine.running
+                                   for r in self.replicas):
+                now = max(now, pending[0].arrival_s)
+            self._dispatch(pending, now)
+            for rep in self.replicas:
+                if rep.engine.waiting or rep.engine.running:
+                    rep.engine.step(now)
+            self._sample_queues()
+            now = max(now, clock())     # monotonic across idle jumps
+
+    def _run_threaded(self, pending: deque, clock: Callable[[], float]):
+        """Thread-per-replica stepping; the main thread plays arrivals in
+        wall-clock time through the router."""
+        self._feeding_done = False
+        self._errors = []
+        threads = [threading.Thread(target=self._replica_loop, args=(rep,),
+                                    name=f"replica-{rep.idx}", daemon=True)
+                   for rep in self.replicas]
+        for t in threads:
+            t.start()
+        try:
+            while pending and not self._errors:
+                now = clock()
+                if pending[0].arrival_s > now:
+                    time.sleep(min(pending[0].arrival_s - now, 0.005))
+                else:
+                    self._dispatch(pending, now)
+                self._sample_queues()
+        finally:
+            self._feeding_done = True
+            while any(t.is_alive() for t in threads):   # drain phase
+                self._sample_queues()
+                time.sleep(0.01)
+            for t in threads:
+                t.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def _replica_loop(self, rep: Replica):
+        clock = rep.engine.clock
+        try:
+            with rep.mesh_ctx():
+                while True:
+                    busy = rep.engine.step(clock())
+                    if not busy:
+                        if self._feeding_done and not rep.engine.waiting \
+                                and not rep.engine.running:
+                            return
+                        time.sleep(0.001)
+        except BaseException as e:          # surface replica crashes
+            self._errors.append(e)
+
+    # ----------------------------------------------------------- metrics --
+    def _collect(self, requests: Sequence[Request],
+                 wall: float) -> ClusterMetrics:
+        per_replica, itl_all = [], []
+        for rep in self.replicas:
+            eng = rep.engine
+            m = collect(rep.requests, wall, eng.itl_samples,
+                        eng.max_kv_fraction, eng.batch_samples)
+            busy = sum(eng.itl_samples) / max(wall, 1e-9)
+            qmax = max((q[rep.idx] for q in self.queue_samples), default=0)
+            per_replica.append(ReplicaStats(
+                replica=rep.idx, n_requests=len(rep.requests),
+                completed=m.n_completed, preemptions=eng.preemptions,
+                busy_fraction=busy,
+                occupancy=m.avg_batch / eng.ecfg.max_batch,
+                max_queue_depth=qmax, metrics=m))
+            itl_all.extend(eng.itl_samples)
+        done = [r for r in requests if r.t_done is not None]
+        return aggregate(
+            per_replica, wall_s=wall, policy=self.router.policy.name,
+            mode=self.mode,
+            ttft_samples=[r.t_first_token - r.arrival_s for r in done
+                          if r.t_first_token is not None],
+            itl_samples=itl_all,
+            e2e_samples=[r.t_done - r.arrival_s for r in done],
+            queue_samples=self.queue_samples)

@@ -1,0 +1,115 @@
+"""Aggregated cluster metrics: goodput, per-replica utilization, queue
+depths, and TTFT/ITL/E2E tail percentiles across all replicas.
+
+``ClusterMetrics`` is the cluster-level analogue of
+:class:`~repro.serving.metrics.ServingMetrics`: per-replica metrics are
+kept verbatim (``per_replica``) so a router-policy comparison can look at
+imbalance, while the aggregate view answers the paper's Table IV question
+— does BCA x R replicas beat the single MAX-batch replica?
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.serving.metrics import Percentiles, ServingMetrics
+
+
+@dataclasses.dataclass
+class ReplicaStats:
+    """One replica's contribution to a cluster run."""
+    replica: int
+    n_requests: int              # requests routed to this replica
+    completed: int
+    preemptions: int
+    busy_fraction: float         # time in decode steps / cluster wall time
+    occupancy: float             # avg running batch / max_batch
+    max_queue_depth: int
+    metrics: ServingMetrics
+
+    def row(self) -> str:
+        return (f"replica {self.replica}: reqs={self.n_requests} "
+                f"busy={self.busy_fraction*100:.0f}% "
+                f"occ={self.occupancy*100:.0f}% "
+                f"preempt={self.preemptions} "
+                f"qmax={self.max_queue_depth}  {self.metrics.row()}")
+
+
+@dataclasses.dataclass
+class ClusterMetrics:
+    wall_s: float
+    n_replicas: int
+    policy: str
+    mode: str
+    completed: int               # requests finished across all replicas
+    total_tokens: int            # input + output (paper's throughput unit)
+    output_tokens: int
+    ttft_s: float                # mean time-to-first-token
+    ttft: Percentiles
+    itl: Percentiles             # pooled decode-step latencies
+    e2e: Percentiles
+    mean_queue_depth: float
+    max_queue_depth: int
+    per_replica: List[ReplicaStats]
+
+    @property
+    def throughput(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def output_throughput(self) -> float:
+        """Aggregate output tok/s — the replication payoff metric."""
+        return self.output_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def goodput_rps(self) -> float:
+        """Completed requests per second across the cluster."""
+        return self.completed / max(self.wall_s, 1e-9)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(r.preemptions for r in self.per_replica)
+
+    def row(self) -> str:
+        return (f"R={self.n_replicas} [{self.policy}/{self.mode}] "
+                f"T={self.throughput:.1f} tok/s "
+                f"out={self.output_throughput:.1f} tok/s "
+                f"goodput={self.goodput_rps:.2f} req/s "
+                f"TTFT_p95={self.ttft.p95*1e3:.0f} ms "
+                f"ITL_p95={self.itl.p95*1e3:.0f} ms")
+
+    def summary(self) -> str:
+        lines = [self.row(),
+                 f"  TTFT {self.ttft.row()}",
+                 f"  ITL  {self.itl.row()}",
+                 f"  E2E  {self.e2e.row(scale=1.0, unit='s')}",
+                 f"  queue depth: mean={self.mean_queue_depth:.1f} "
+                 f"max={self.max_queue_depth}"]
+        lines += [f"  {r.row()}" for r in self.per_replica]
+        return "\n".join(lines)
+
+
+def aggregate(per_replica: List[ReplicaStats], *, wall_s: float, policy: str,
+              mode: str, ttft_samples: Sequence[float],
+              itl_samples: Sequence[float], e2e_samples: Sequence[float],
+              queue_samples: Sequence[Sequence[int]]) -> ClusterMetrics:
+    """Fold per-replica stats + pooled latency samples into one view."""
+    depth = np.asarray([sum(q) for q in queue_samples], float) \
+        if queue_samples else np.zeros(0)
+    return ClusterMetrics(
+        wall_s=wall_s,
+        n_replicas=len(per_replica),
+        policy=policy,
+        mode=mode,
+        completed=sum(r.completed for r in per_replica),
+        total_tokens=sum(r.metrics.total_tokens for r in per_replica),
+        output_tokens=sum(r.metrics.output_tokens for r in per_replica),
+        ttft_s=float(np.mean(ttft_samples)) if len(ttft_samples) else 0.0,
+        ttft=Percentiles.from_samples(ttft_samples),
+        itl=Percentiles.from_samples(itl_samples),
+        e2e=Percentiles.from_samples(e2e_samples),
+        mean_queue_depth=float(depth.mean()) if depth.size else 0.0,
+        max_queue_depth=int(depth.max()) if depth.size else 0,
+        per_replica=per_replica)

@@ -1,0 +1,112 @@
+"""Request routing across model replicas — pluggable policies.
+
+A policy sees the incoming :class:`~repro.serving.workload.Request` and a
+sequence of replica handles and returns the index of the replica that
+should serve it. Replica handles are duck-typed; a policy may read
+
+* ``queue_depth`` — requests admitted to the replica but still waiting,
+* ``in_flight``  — requests currently in the running batch,
+* ``load``       — ``queue_depth + in_flight``,
+* ``kv_load``    — fraction of the replica's KV pool in use.
+
+Policies are deliberately O(R) and stateless (except round-robin's
+counter): the paper's replication gain (Sec. VI-B) comes from the memory
+freed by BCA, so the router's job is only to keep replicas evenly loaded —
+ties break toward the lowest replica index, which keeps routing
+deterministic for the cluster's sync test mode.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Dict, List, Sequence, Type, Union
+
+from repro.serving.workload import Request
+
+
+class RouterPolicy(abc.ABC):
+    """Picks a replica index for each arriving request."""
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def choose(self, req: Request, replicas: Sequence) -> int:
+        ...
+
+    def reset(self):
+        """Forget any routing state (e.g. after a warmup workload)."""
+
+
+class RoundRobin(RouterPolicy):
+    """Cycle through replicas in arrival order — load-blind, zero-cost."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def choose(self, req: Request, replicas: Sequence) -> int:
+        idx = self._next % len(replicas)
+        self._next += 1
+        return idx
+
+    def reset(self):
+        self._next = 0
+
+
+class JoinShortestQueue(RouterPolicy):
+    """Send to the replica with the fewest admitted-or-running requests —
+    the classic JSQ policy; near-optimal tail latency under bursty load."""
+
+    name = "jsq"
+
+    def choose(self, req: Request, replicas: Sequence) -> int:
+        return min(range(len(replicas)),
+                   key=lambda i: (replicas[i].load, i))
+
+
+class LeastKVLoad(RouterPolicy):
+    """Send to the replica with the most free KV-pool blocks, breaking
+    ties by queue length. Long prompts go where they can be admitted
+    immediately instead of stalling behind a full pool (the admission
+    watermark the engine enforces)."""
+
+    name = "least-kv"
+
+    def choose(self, req: Request, replicas: Sequence) -> int:
+        return min(range(len(replicas)),
+                   key=lambda i: (replicas[i].kv_load, replicas[i].load, i))
+
+
+POLICIES: Dict[str, Type[RouterPolicy]] = {
+    cls.name: cls for cls in (RoundRobin, JoinShortestQueue, LeastKVLoad)}
+
+
+def make_policy(policy: Union[str, RouterPolicy]) -> RouterPolicy:
+    if isinstance(policy, RouterPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown router policy {policy!r}; "
+                         f"available: {sorted(POLICIES)}") from None
+
+
+class Router:
+    """Applies a policy and keeps per-replica assignment counts."""
+
+    def __init__(self, policy: Union[str, RouterPolicy], n_replicas: int):
+        self.policy = make_policy(policy)
+        self.assigned: List[int] = [0] * n_replicas
+
+    def route(self, req: Request, replicas: Sequence) -> int:
+        idx = self.policy.choose(req, replicas)
+        if not 0 <= idx < len(replicas):
+            raise IndexError(
+                f"policy {self.policy.name!r} chose replica {idx} "
+                f"of {len(replicas)}")
+        self.assigned[idx] += 1
+        return idx
+
+    def reset(self):
+        self.policy.reset()
+        self.assigned = [0] * len(self.assigned)

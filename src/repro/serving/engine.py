@@ -37,7 +37,7 @@ import dataclasses
 import time
 from collections import deque
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +62,69 @@ class EngineConfig:
     # "gather" = legacy dense-copy fallback (forced for sliding windows)
     decode_mode: str = "paged"
 
+    def __post_init__(self):
+        """Fail loudly at construction instead of as a downstream shape
+        error three layers into the first decode step."""
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.block_size < 1:
+            raise ValueError(
+                f"block_size must be >= 1, got {self.block_size}")
+        if self.kv_pool_tokens % self.block_size:
+            raise ValueError(
+                f"kv_pool_tokens ({self.kv_pool_tokens}) must be divisible "
+                f"by block_size ({self.block_size}); the pool is allocated "
+                f"in whole blocks")
+        if self.kv_pool_tokens < self.block_size:
+            raise ValueError(
+                f"kv_pool_tokens ({self.kv_pool_tokens}) must hold at least "
+                f"one block of {self.block_size} tokens")
+        if self.max_model_len > self.kv_pool_tokens:
+            raise ValueError(
+                f"max_model_len ({self.max_model_len}) exceeds the KV pool "
+                f"capacity ({self.kv_pool_tokens} tokens): a single "
+                f"max-length request could never be admitted — raise "
+                f"kv_pool_tokens or lower max_model_len")
+        if self.prefill_bucket < 1:
+            raise ValueError(
+                f"prefill_bucket must be >= 1, got {self.prefill_bucket}")
+        if self.decode_mode not in ("paged", "gather"):
+            raise ValueError(
+                f"decode_mode must be 'paged' or 'gather', "
+                f"got {self.decode_mode!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StepFunctions:
+    """The engine's three jitted entry points, bundled so co-located
+    replicas (serving.cluster) can share one compile cache.
+
+    ``jax.jit`` caches per wrapper object, so two engines that each build
+    their own ``jax.jit(partial(...))`` recompile identical programs.
+    Replicas of the same model with the same ``block_size`` can pass one
+    shared bundle instead and compile each (batch, table) bucket once per
+    host.
+    """
+    model: Model
+    block_size: int
+    prefill: Callable
+    decode: Callable
+    paged: Callable
+
+    @classmethod
+    def build(cls, model: Model, block_size: int) -> "StepFunctions":
+        # zero-copy step: the pool pytree (arg 1) is donated so the K/V
+        # row scatters alias the input buffers; CPU has no buffer
+        # donation, so skip it there to avoid per-compile warnings
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        return cls(
+            model=model, block_size=block_size,
+            prefill=jax.jit(partial(_prefill_fn, model),
+                            static_argnames=("cache_len",)),
+            decode=jax.jit(partial(_decode_fn, model)),
+            paged=jax.jit(partial(_paged_decode_fn, model, block_size),
+                          donate_argnums=donate))
+
 
 def _bucket(n: int, b: int) -> int:
     return max(b, ((n + b - 1) // b) * b)
@@ -75,7 +138,8 @@ def _pow2_bucket(n: int, lo: int = 1) -> int:
 
 
 class ContinuousBatchingEngine:
-    def __init__(self, model: Model, params, ecfg: EngineConfig):
+    def __init__(self, model: Model, params, ecfg: EngineConfig, *,
+                 steps: Optional[StepFunctions] = None):
         self.model = model
         self.cfg: ArchConfig = model.cfg
         self.params = params
@@ -84,10 +148,6 @@ class ContinuousBatchingEngine:
         self.pool = PagedKVCache(self.cfg, num_blocks=nb,
                                  block_size=ecfg.block_size,
                                  max_batch=ecfg.max_batch)
-        if ecfg.decode_mode not in ("paged", "gather"):
-            raise ValueError(
-                f"decode_mode must be 'paged' or 'gather', "
-                f"got {ecfg.decode_mode!r}")
         # ring caches (sliding window) aren't paged — fall back to gather
         self.decode_mode = ("gather" if self.cfg.sliding_window
                             else ecfg.decode_mode)
@@ -95,17 +155,26 @@ class ContinuousBatchingEngine:
         self.running: List[Request] = []
         self._tokens: Dict[int, int] = {}        # rid -> next input token
         self._pos: Dict[int, int] = {}           # rid -> write position
-        self._prefill_jit = jax.jit(
-            partial(_prefill_fn, self.model),
-            static_argnames=("cache_len",))
-        self._decode_jit = jax.jit(partial(_decode_fn, self.model))
-        # zero-copy step: the pool pytree (arg 1) is donated so the K/V
-        # row scatters alias the input buffers; CPU has no buffer
-        # donation, so skip it there to avoid per-compile warnings
-        donate = () if jax.default_backend() == "cpu" else (1,)
-        self._paged_jit = jax.jit(
-            partial(_paged_decode_fn, self.model, self.pool.block_size),
-            donate_argnums=donate)
+        # jitted entry points: private by default, shareable across
+        # co-located replicas (must agree on model and block_size — the
+        # paged step bakes both in, so a mismatch would silently compute
+        # wrong physical (block, slot) addresses)
+        if steps is not None:
+            if steps.model is not model:
+                raise ValueError("shared StepFunctions were built for a "
+                                 "different Model instance")
+            if steps.block_size != ecfg.block_size:
+                raise ValueError(
+                    f"shared StepFunctions were built for block_size="
+                    f"{steps.block_size}, engine uses {ecfg.block_size}")
+        self._steps = steps or StepFunctions.build(model, ecfg.block_size)
+        self._prefill_jit = self._steps.prefill
+        self._decode_jit = self._steps.decode
+        self._paged_jit = self._steps.paged
+        # wall clock for request timestamps (seconds since serving start);
+        # run() installs one, a cluster driving step() directly installs a
+        # shared cluster-wide clock so replica timelines are comparable
+        self.clock: Optional[Callable[[], float]] = None
         # telemetry
         self.itl_samples: List[float] = []
         self.batch_samples: List[int] = []
@@ -115,6 +184,17 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------- admin --
     def add_request(self, req: Request):
         self.waiting.append(req)
+
+    def reset_stats(self):
+        """Clear accumulated telemetry (e.g. after a warmup workload) so
+        the next run's metrics aren't polluted by compile-time samples."""
+        self.itl_samples = []
+        self.batch_samples = []
+        self.max_kv_fraction = 0.0
+        self.preemptions = 0
+
+    def _now(self, fallback: float) -> float:
+        return self.clock() if self.clock is not None else fallback
 
     def _admit(self, now: float):
         while (self.waiting and len(self.running) < self.ecfg.max_batch
@@ -126,6 +206,13 @@ class ContinuousBatchingEngine:
             self.waiting.popleft()
             self.pool.manager.allocate(req.req_id, need)
             self._prefill(req)
+            # prefill emitted the first output token (int() inside it
+            # synced), so TTFT is stamped here, not at the first decode
+            # step. `now` can be ahead of the wall clock when the caller
+            # fast-forwards idle time to the next arrival; take the max so
+            # TTFT stays on the same (possibly simulated) timeline as
+            # arrival_s/t_done and never goes negative.
+            req.t_first_token = max(now, self._now(now))
             self.running.append(req)
 
     def _prefill(self, req: Request):
@@ -257,12 +344,15 @@ class ContinuousBatchingEngine:
         for r in requests:
             self.add_request(r)
         t_start = time.perf_counter()
+        self.clock = lambda: time.perf_counter() - t_start
         now = 0.0
         while self.waiting or self.running:
             if not self.running and self.waiting:
                 now = max(now, self.waiting[0].arrival_s)
             self.step(now)
-            now = time.perf_counter() - t_start
+            # keep `now` monotonic across fast-forward jumps so t_done
+            # never lands behind the arrival time it was admitted at
+            now = max(now, time.perf_counter() - t_start)
         wall = time.perf_counter() - t_start
         return collect(requests, wall, self.itl_samples,
                        self.max_kv_fraction, self.batch_samples)

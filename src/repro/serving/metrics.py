@@ -1,12 +1,35 @@
-"""Serving metrics: throughput, ITL, E2E, KV usage (paper Tables I/IV)."""
+"""Serving metrics: throughput, ITL, TTFT, E2E, KV usage (paper Tables
+I/IV), with tail-latency percentiles so router policies in the cluster
+subsystem can be compared on p95/p99 behaviour, not just mean throughput."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Sequence
 
 import numpy as np
 
 from repro.serving.workload import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class Percentiles:
+    """p50/p95/p99 of a latency sample set (seconds)."""
+    p50: float = 0.0
+    p95: float = 0.0
+    p99: float = 0.0
+
+    @classmethod
+    def from_samples(cls, samples: Sequence[float]) -> "Percentiles":
+        if len(samples) == 0:
+            return cls()
+        p50, p95, p99 = np.percentile(np.asarray(samples, float),
+                                      [50.0, 95.0, 99.0])
+        return cls(float(p50), float(p95), float(p99))
+
+    def row(self, scale: float = 1e3, unit: str = "ms") -> str:
+        return (f"p50={self.p50 * scale:.2f}{unit} "
+                f"p95={self.p95 * scale:.2f}{unit} "
+                f"p99={self.p99 * scale:.2f}{unit}")
 
 
 @dataclasses.dataclass
@@ -18,6 +41,12 @@ class ServingMetrics:
     e2e_s: float                 # mean request end-to-end latency
     max_kv_fraction: float
     avg_batch: float
+    # tail-latency view (all seconds); defaults keep older call sites valid
+    n_completed: int = 0
+    ttft_s: float = 0.0          # mean time-to-first-token
+    ttft: Percentiles = dataclasses.field(default_factory=Percentiles)
+    itl: Percentiles = dataclasses.field(default_factory=Percentiles)
+    e2e: Percentiles = dataclasses.field(default_factory=Percentiles)
 
     @property
     def throughput(self) -> float:
@@ -32,6 +61,10 @@ class ServingMetrics:
                 f"E2E={self.e2e_s:.2f} s  KV_max={self.max_kv_fraction*100:.1f}%  "
                 f"avgB={self.avg_batch:.1f}")
 
+    def latency_row(self) -> str:
+        return (f"TTFT {self.ttft.row()}  ITL {self.itl.row()}  "
+                f"E2E {self.e2e.row(scale=1.0, unit='s')}")
+
 
 def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
             max_kv_fraction: float, batch_samples: List[int]
@@ -40,6 +73,8 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
     total_in = sum(r.prompt_len for r in done)
     total_out = sum(r.generated for r in done)
     e2e = [r.t_done - r.arrival_s for r in done]
+    ttft = [r.t_first_token - r.arrival_s for r in done
+            if r.t_first_token is not None]
     return ServingMetrics(
         wall_s=wall_s,
         total_tokens=total_in + total_out,
@@ -47,4 +82,9 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
         itl_s=float(np.mean(itl_samples)) if itl_samples else 0.0,
         e2e_s=float(np.mean(e2e)) if e2e else 0.0,
         max_kv_fraction=max_kv_fraction,
-        avg_batch=float(np.mean(batch_samples)) if batch_samples else 0.0)
+        avg_batch=float(np.mean(batch_samples)) if batch_samples else 0.0,
+        n_completed=len(done),
+        ttft_s=float(np.mean(ttft)) if ttft else 0.0,
+        ttft=Percentiles.from_samples(ttft),
+        itl=Percentiles.from_samples(itl_samples),
+        e2e=Percentiles.from_samples(e2e))

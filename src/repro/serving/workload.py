@@ -4,6 +4,19 @@ The paper samples 2000 requests from cleaned ShareGPT (mean 161 input /
 338 output tokens) in online mode and fixed 161/338 in offline mode. We
 generate token ids synthetically with the same length distributions
 (lognormal spread around the means, matching the heavy tail of chat data).
+
+Arrival processes (``arrival_pattern``) beyond the paper's Poisson stream
+stress the cluster router under non-stationary load:
+
+* ``"poisson"`` — stationary exponential inter-arrivals (the default, and
+  bitwise-identical to the generator before patterns existed).
+* ``"burst"``  — requests arrive in simultaneous groups of ``burst_size``
+  with exponential gaps *between* groups, long-run rate preserved; the
+  worst case for a queue-blind router.
+* ``"ramp"``   — non-homogeneous Poisson whose instantaneous rate climbs
+  linearly 3x from the start to the end of the trace, normalized so the
+  expected long-run rate equals the nominal one; models a traffic ramp
+  that outgrows a static placement.
 """
 from __future__ import annotations
 
@@ -14,6 +27,8 @@ import numpy as np
 
 SHAREGPT_MEAN_IN = 161
 SHAREGPT_MEAN_OUT = 338
+
+ARRIVAL_PATTERNS = ("poisson", "burst", "ramp")
 
 
 @dataclasses.dataclass
@@ -33,14 +48,58 @@ class Request:
         return int(self.prompt.shape[0])
 
 
+def arrival_times(n: int, rate: float, *, pattern: str = "poisson",
+                  rng: Optional[np.random.Generator] = None, seed: int = 0,
+                  burst_size: int = 8) -> np.ndarray:
+    """Arrival timestamps (seconds, nondecreasing) for ``n`` requests at a
+    long-run average of ``rate`` requests/s under the given pattern."""
+    if pattern not in ARRIVAL_PATTERNS:
+        raise ValueError(f"arrival pattern must be one of "
+                         f"{ARRIVAL_PATTERNS}, got {pattern!r}")
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate}")
+    rng = rng if rng is not None else np.random.default_rng(seed)
+    if pattern == "poisson":
+        return np.cumsum(rng.exponential(1.0 / rate, size=n))
+    if pattern == "burst":
+        if burst_size < 1:
+            raise ValueError(f"burst_size must be >= 1, got {burst_size}")
+        n_bursts = -(-n // burst_size)
+        # exponential gaps between bursts at rate/burst_size keeps the
+        # long-run request rate equal to `rate`
+        starts = np.cumsum(rng.exponential(burst_size / rate, size=n_bursts))
+        return np.repeat(starts, burst_size)[:n]
+    # ramp: instantaneous rate grows linearly 3x start-to-end; the gap
+    # scale is normalized by the harmonic mean so the expected long-run
+    # rate is exactly `rate` (a plain 0.5x..1.5x ramp would land ~9% low)
+    ramp = np.linspace(0.5, 1.5, n)
+    scale = (1.0 / rate) / float(np.mean(1.0 / ramp))
+    return np.cumsum(rng.exponential(scale, size=n) / ramp)
+
+
 def sharegpt_like(n: int, vocab: int, *, seed: int = 0,
                   mean_in: int = SHAREGPT_MEAN_IN,
                   mean_out: int = SHAREGPT_MEAN_OUT,
                   fixed: bool = False, sigma: float = 0.7,
                   arrival_rate: Optional[float] = None,
+                  arrival_pattern: str = "poisson", burst_size: int = 8,
                   max_len: int = 2048) -> List[Request]:
     """``fixed=True`` = the paper's offline mode (exact 161/338 lengths)."""
+    if arrival_pattern not in ARRIVAL_PATTERNS:
+        raise ValueError(f"arrival pattern must be one of "
+                         f"{ARRIVAL_PATTERNS}, got {arrival_pattern!r}")
+    if arrival_pattern != "poisson" and not arrival_rate:
+        raise ValueError(f"arrival_pattern={arrival_pattern!r} requires "
+                         f"arrival_rate (otherwise it is silently a t=0 "
+                         f"batch workload)")
     rng = np.random.default_rng(seed)
+    arrivals = None
+    if arrival_rate and arrival_pattern != "poisson":
+        # non-default patterns draw from their own stream so the length
+        # draws below stay bitwise-identical for a given seed
+        arrivals = arrival_times(n, arrival_rate, pattern=arrival_pattern,
+                                 rng=np.random.default_rng((seed, 1)),
+                                 burst_size=burst_size)
     reqs = []
     t = 0.0
     for i in range(n):
@@ -51,7 +110,9 @@ def sharegpt_like(n: int, vocab: int, *, seed: int = 0,
                               max_len // 2))
             lout = int(np.clip(rng.lognormal(np.log(mean_out), sigma), 1,
                                max_len // 2))
-        if arrival_rate:
+        if arrivals is not None:
+            t = float(arrivals[i])
+        elif arrival_rate:
             t += rng.exponential(1.0 / arrival_rate)
         prompt = rng.integers(0, vocab, size=lin).astype(np.int32)
         reqs.append(Request(req_id=i, prompt=prompt, max_new_tokens=lout,

@@ -1,0 +1,232 @@
+"""Replicated serving cluster: a 1-replica sync cluster must be
+token-for-token identical to the bare engine, routing policies must
+balance load deterministically, per-replica state (pools, preemption
+accounting) must not leak between co-located engines, and the autoscale
+decision (curves -> BCA -> plan -> launch size) must be exact on
+synthetic curves."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.hardware import H100_PAPER
+from repro.core.perfmodel import ServingCurves
+from repro.models.model import Model, init_params
+from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                           ReplicatedCluster, StepFunctions, sharegpt_like)
+from repro.serving.cluster import decide, make_policy
+from repro.serving.cluster.router import (JoinShortestQueue, LeastKVLoad,
+                                          RoundRobin, Router)
+
+
+@pytest.fixture(scope="module")
+def setup(rules):
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    # one shared compile cache for every engine in this module (all use
+    # block_size=8), so replicas don't recompile identical programs
+    steps = StepFunctions.build(model, 8)
+    return cfg, params, model, steps
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=4, block_size=8, kv_pool_tokens=4096,
+                max_model_len=128, prefill_bucket=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _engine(setup, **kw):
+    _, params, model, steps = setup
+    return ContinuousBatchingEngine(model, params, _ecfg(**kw), steps=steps)
+
+
+def _wl(cfg, n=4, seed=2, mean_out=6):
+    return sharegpt_like(n, cfg.vocab_size, seed=seed, mean_in=12,
+                         mean_out=mean_out, max_len=48, sigma=0.4)
+
+
+# ------------------------------------------------------------ scheduler --
+def test_sync_single_replica_matches_bare_engine(setup):
+    """Deterministic mode: the cluster wrapper must be invisible — same
+    tokens as running the engine directly."""
+    cfg = setup[0]
+    bare = _wl(cfg)
+    _engine(setup).run(bare)
+    cluster = ReplicatedCluster([_engine(setup)], mode="sync")
+    routed = _wl(cfg)
+    m = cluster.run(routed)
+    assert m.completed == len(routed)
+    assert ([r.output_tokens for r in routed]
+            == [r.output_tokens for r in bare])
+
+
+def test_threaded_mode_matches_sync_mode(setup):
+    """Thread-per-replica stepping must not change any output token."""
+    cfg = setup[0]
+    outs = {}
+    for mode in ("sync", "thread"):
+        cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                    mode=mode)
+        reqs = _wl(cfg, n=4, seed=3)
+        m = cluster.run(reqs)
+        assert m.completed == 4
+        outs[mode] = [r.output_tokens for r in reqs]
+    assert outs["sync"] == outs["thread"]
+
+
+def test_round_robin_two_replicas_aggregates(setup):
+    cfg = setup[0]
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                policy="round-robin", mode="sync")
+    reqs = _wl(cfg, n=6, seed=4, mean_out=5)
+    m = cluster.run(reqs)
+    assert cluster.router.assigned == [3, 3]
+    assert m.completed == 6 and m.n_replicas == 2
+    assert [r.n_requests for r in m.per_replica] == [3, 3]
+    assert m.total_tokens == sum(r.metrics.total_tokens
+                                 for r in m.per_replica)
+    assert m.output_tokens == sum(r.generated for r in reqs)
+    assert m.goodput_rps > 0 and m.output_throughput > 0
+    assert 0 < m.ttft.p50 <= m.ttft.p95 <= m.ttft.p99
+    assert 0 < m.itl.p50 <= m.itl.p99
+    for r in m.per_replica:
+        assert 0 < r.occupancy <= 1.0
+        assert r.completed == 3
+    assert m.summary()         # renders
+
+
+def test_preemption_isolated_per_replica(setup):
+    """Two engines sharing a host: replica 0's pool exhaustion/preemption
+    churn must not perturb replica 1's tokens or accounting (no
+    module-level serving state)."""
+    cfg = setup[0]
+    reqs = sharegpt_like(6, cfg.vocab_size, seed=11, mean_in=20,
+                         mean_out=36, max_len=60, sigma=0.1)
+    # replica 0: pool too small for its 3 requests to finish un-preempted;
+    # replica 1: roomy pool, must stay preemption-free
+    e0 = _engine(setup, max_batch=3, kv_pool_tokens=128, max_model_len=96)
+    e1 = _engine(setup, max_batch=3, kv_pool_tokens=2048, max_model_len=96)
+    cluster = ReplicatedCluster([e0, e1], policy="round-robin", mode="sync")
+    m = cluster.run(reqs)
+    assert m.completed == 6
+    assert e0.preemptions > 0, "replica 0 was meant to hit pool exhaustion"
+    assert e1.preemptions == 0
+    assert m.per_replica[0].preemptions == e0.preemptions
+    # pool accounting drained cleanly on BOTH engines
+    for eng in (e0, e1):
+        assert eng.pool.manager.tables == {}
+        assert len(eng.pool.manager.free) == eng.pool.manager.num_blocks
+        assert len(eng.pool._free_slots) == eng.ecfg.max_batch
+    # replica 1's tokens match an undisturbed bare-engine run of its share
+    alone = sharegpt_like(6, cfg.vocab_size, seed=11, mean_in=20,
+                          mean_out=36, max_len=60, sigma=0.1)
+    odd = [r for i, r in enumerate(alone) if i % 2 == 1]
+    _engine(setup, max_batch=3, kv_pool_tokens=2048,
+            max_model_len=96).run(odd)
+    assert ([r.output_tokens for i, r in enumerate(reqs) if i % 2 == 1]
+            == [r.output_tokens for r in odd])
+
+
+def test_timed_arrivals_keep_nonnegative_ttft(setup):
+    """Fast-forwarded idle time (run() jumping `now` to the next arrival)
+    must not produce TTFT/E2E stamped behind the arrival time."""
+    cfg = setup[0]
+    reqs = sharegpt_like(3, cfg.vocab_size, seed=6, mean_in=10, mean_out=4,
+                         max_len=32, sigma=0.2, arrival_rate=0.5)
+    assert reqs[-1].arrival_s > 1.0      # well ahead of the wall clock
+    m = _engine(setup).run(reqs)
+    assert m.n_completed == 3
+    for r in reqs:
+        assert r.t_first_token >= r.arrival_s
+        assert r.t_done >= r.t_first_token
+    # fast-forwarded admissions may legitimately stamp TTFT == 0 (idle
+    # engine jumps straight to the arrival); negative is the bug
+    assert m.ttft_s >= 0 and m.ttft.p50 >= 0 and m.e2e.p50 >= 0
+
+
+def test_shared_steps_must_match_engine_config(setup):
+    _, params, model, steps = setup
+    with pytest.raises(ValueError, match="block_size"):
+        ContinuousBatchingEngine(model, params, _ecfg(block_size=16),
+                                 steps=steps)
+    other = Model(model.cfg, model.rules)
+    with pytest.raises(ValueError, match="different Model"):
+        ContinuousBatchingEngine(other, params, _ecfg(), steps=steps)
+
+
+def test_cluster_constructor_validation(setup):
+    with pytest.raises(ValueError, match="at least one"):
+        ReplicatedCluster([])
+    with pytest.raises(ValueError, match="mode"):
+        ReplicatedCluster([_engine(setup)], mode="warp")
+    with pytest.raises(ValueError, match="meshes"):
+        ReplicatedCluster([_engine(setup)], meshes=[None, None])
+
+
+# --------------------------------------------------------------- router --
+@dataclasses.dataclass
+class _Stub:
+    queue_depth: int = 0
+    in_flight: int = 0
+    kv_load: float = 0.0
+
+    @property
+    def load(self):
+        return self.queue_depth + self.in_flight
+
+
+def test_round_robin_cycles():
+    p = RoundRobin()
+    reps = [_Stub(), _Stub(), _Stub()]
+    assert [p.choose(None, reps) for _ in range(5)] == [0, 1, 2, 0, 1]
+    p.reset()
+    assert p.choose(None, reps) == 0
+
+
+def test_jsq_prefers_short_queue_breaking_ties_low():
+    p = JoinShortestQueue()
+    assert p.choose(None, [_Stub(3, 1), _Stub(1, 1), _Stub(0, 2)]) == 1
+    assert p.choose(None, [_Stub(1, 1), _Stub(2, 0), _Stub(0, 2)]) == 0
+
+
+def test_least_kv_prefers_free_pool_then_queue():
+    p = LeastKVLoad()
+    assert p.choose(None, [_Stub(0, 0, 0.9), _Stub(5, 0, 0.1)]) == 1
+    assert p.choose(None, [_Stub(2, 0, 0.5), _Stub(1, 0, 0.5)]) == 1
+
+
+def test_policy_registry():
+    assert make_policy("jsq").name == "jsq"
+    inst = LeastKVLoad()
+    assert make_policy(inst) is inst
+    with pytest.raises(ValueError, match="unknown router policy"):
+        make_policy("random-telepathy")
+    r = Router("round-robin", 2)
+    r.route(None, [_Stub(), _Stub()])
+    assert r.assigned == [1, 0]
+
+
+# ------------------------------------------------------------ autoscale --
+def test_autoscale_decide_on_synthetic_curves():
+    curves = ServingCurves(
+        batches=np.array([1., 2, 4, 8, 16, 32]),
+        throughput=np.array([10., 19, 35, 60, 70, 71]),
+        itl_s=np.array([.010, .011, .012, .013, .020, .040]),
+        kv_fraction=np.array([.02, .04, .08, .16, .32, .64]))
+    cfg = get_config("opt-1.3b")
+    # slo = 2 x ITL(B=1) = 20ms -> B=32 infeasible -> B_opt = 16
+    d = decide(curves, hw=H100_PAPER, cfg=cfg, ctx=331, slo_factor=2.0,
+               eps=0.1, mesh_slices=6)
+    assert d.bca.b_opt == 16 and d.per_replica_batch == 16
+    assert d.slo_s == pytest.approx(0.020)
+    assert d.plan.n_replicas >= 6       # H100 fits many tiny-KV replicas
+    assert d.n_replicas == 6            # capped to the mesh slice count
+    # memory-feasible count below the slice count: largest divisor wins
+    d2 = decide(curves, hw=H100_PAPER, cfg=cfg, ctx=331, slo_factor=2.0,
+                eps=0.1, max_replicas=4, mesh_slices=6)
+    assert d2.plan.n_replicas == 4 and d2.n_replicas == 3
+    assert "launch" in d2.summary()
