@@ -28,6 +28,9 @@ def main() -> int:
     ap.add_argument("--datapath", action="store_true",
                     help="also run the decode data-path microbenchmark "
                          "(gather-copy vs zero-copy paged)")
+    ap.add_argument("--prefix", action="store_true",
+                    help="also run the prefix-cache reuse benchmark "
+                         "(shared-system-prompt workload, cache on vs off)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import paper_claims as pc
@@ -75,6 +78,20 @@ def main() -> int:
                     f"speedup_b16={sp:.2f}")
 
         _run("decode_datapath", sweep, _dp_derive)
+
+    if args.prefix:
+        from benchmarks.prefix_reuse import run_pair
+
+        def _pfx_derive(o):
+            for key in ("claim_prefill_2x", "claim_blocks_2x",
+                        "claim_bit_identical"):
+                claim(o, key)
+            return (f"prefill_ratio={o['prefill_ratio']:.2f};"
+                    f"blocks_ratio={o['blocks_ratio']:.2f};"
+                    f"identical={o['tokens_identical']}")
+
+        # reduced shape (the full acceptance run is the module's default)
+        _run("prefix_reuse", lambda: run_pair(per_tenant=6), _pfx_derive)
 
     # §Roofline aggregation from the dry-run artifacts, if present
     from benchmarks.roofline_table import load_records, summary

@@ -44,12 +44,34 @@ class BCAResult:
                 f"(MAX uses {self.kv_fraction_at_max*100:.1f}%)")
 
 
+def with_prefix_reuse(curves: ServingCurves,
+                      hit_rate: float) -> ServingCurves:
+    """Rescale measured/modeled curves for a prefix-cache hit rate.
+
+    A hit rate of h (fraction of prompt tokens served from shared cached
+    blocks, as measured by ``ServingMetrics.prefix.hit_rate``) means each
+    request *stores* only ``(1-h)`` of its KV — shared blocks count once.
+    Only the KV-fraction curve changes: decode still streams the full
+    context per request per step, so T(B) and ITL(B) are untouched. This
+    is the hook that lets BCA size B_opt from effective footprint: the
+    same pool now admits ``1/(1-h)`` x the requests, and the memory BCA
+    frees (the replication planner's input) grows accordingly.
+    """
+    if not 0.0 <= hit_rate < 1.0:
+        raise ValueError(f"hit_rate must be in [0, 1), got {hit_rate}")
+    return dataclasses.replace(
+        curves, kv_fraction=curves.kv_fraction * (1.0 - hit_rate))
+
+
 class BatchingConfigurationAdvisor:
     def __init__(self, curves: ServingCurves, *, slo_s: float,
-                 eps: float = 0.1):
+                 eps: float = 0.1, prefix_hit_rate: float = 0.0):
+        if prefix_hit_rate:
+            curves = with_prefix_reuse(curves, prefix_hit_rate)
         self.curves = curves
         self.slo_s = slo_s
         self.eps = eps
+        self.prefix_hit_rate = prefix_hit_rate
 
     def solve(self) -> BCAResult:
         c = self.curves

@@ -139,10 +139,26 @@ class ServingCurves:
 def decode_curves(cfg: ArchConfig, hw: Hardware, *, ctx: int,
                   max_batch: int, host: Optional[HostOverhead] = None,
                   dtype_bytes: int = 2, kv_capacity_bytes: Optional[float]
-                  = None, out_len: int = 338) -> ServingCurves:
-    """Model-driven throughput/latency curves (the paper's Figs. 2-3)."""
+                  = None, out_len: int = 338,
+                  prefix_hit_rate: float = 0.0) -> ServingCurves:
+    """Model-driven throughput/latency curves (the paper's Figs. 2-3).
+
+    ``prefix_hit_rate`` (fraction of prompt tokens served from a shared
+    prefix cache, measured by the serving engine) shrinks each request's
+    *footprint* in the KV pool — shared blocks are stored once — so the
+    KV-fraction curve scales by ``(1 - hit_rate)``. Step-time terms are
+    deliberately NOT scaled: per decode step every request still *streams*
+    its full context KV (shared blocks are read once per request that
+    attends over them), so the DRAM-bandwidth bottleneck is unchanged;
+    prefix reuse buys capacity (larger feasible B, more replicas), not
+    faster steps.
+    """
+    if not 0.0 <= prefix_hit_rate < 1.0:
+        raise ValueError(
+            f"prefix_hit_rate must be in [0, 1), got {prefix_hit_rate}")
     Bs, T, L, KV = [], [], [], []
-    kv_per_req = cfg.kv_bytes_per_token(dtype_bytes) * ctx
+    kv_per_req = cfg.kv_bytes_per_token(dtype_bytes) * ctx \
+        * (1.0 - prefix_hit_rate)
     if kv_capacity_bytes is None:
         kv_capacity_bytes = hw.hbm_bytes * 0.9 - cfg.num_params() * dtype_bytes
     b = 1
@@ -164,9 +180,19 @@ def decode_curves(cfg: ArchConfig, hw: Hardware, *, ctx: int,
 
 
 def max_batch_for(cfg: ArchConfig, hw: Hardware, ctx: int,
-                  dtype_bytes: int = 2) -> int:
-    """MAX batch: fills 90% of HBM with model + KV (vLLM-style)."""
-    kv_per_req = cfg.kv_bytes_per_token(dtype_bytes) * ctx
+                  dtype_bytes: int = 2,
+                  prefix_hit_rate: float = 0.0) -> int:
+    """MAX batch: fills 90% of HBM with model + KV (vLLM-style).
+
+    ``prefix_hit_rate`` scales each request's *effective* KV footprint by
+    ``(1 - hit_rate)`` — prefix-cached blocks are stored once no matter
+    how many requests share them, so the same HBM admits more requests.
+    """
+    if not 0.0 <= prefix_hit_rate < 1.0:
+        raise ValueError(
+            f"prefix_hit_rate must be in [0, 1), got {prefix_hit_rate}")
+    kv_per_req = cfg.kv_bytes_per_token(dtype_bytes) * ctx \
+        * (1.0 - prefix_hit_rate)
     free = hw.hbm_bytes * 0.9 - cfg.num_params() * dtype_bytes
     if cfg.ssm is not None:
         d_in = cfg.ssm.expand * cfg.d_model

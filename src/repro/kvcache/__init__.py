@@ -1,2 +1,4 @@
 from repro.kvcache.paged import BlockManager, PagedKVCache  # noqa
+from repro.kvcache.prefix import (PrefixIndex, PrefixStats,  # noqa
+                                  prefix_cache_supported)
 from repro.kvcache.view import PagedCacheView  # noqa

@@ -48,7 +48,24 @@ from repro.sharding import KV_SEQ
 
 
 class BlockManager:
-    """Free-list block allocator with a vLLM-style watermark."""
+    """Ref-counted free-list block allocator with a vLLM-style watermark.
+
+    Physical blocks carry a reference count so they can be *shared* across
+    requests (the prefix cache splices one block into many tables):
+    :meth:`allocate` hands out fresh blocks with one reference,
+    :meth:`share` splices existing blocks into another request's table
+    (+1 each), and the prefix index pins cached blocks with its own
+    reference via :meth:`incref`/:meth:`decref`. A block returns to the
+    free list only when its last reference drops.
+
+    :meth:`allocate` enforces the same watermark :meth:`can_allocate`
+    advertises: the last ``watermark_blocks`` blocks are a preemption
+    reserve, reachable only with ``allow_reserve=True`` — the engine's
+    mid-decode append/COW path, which is backed by preempt-on-exhaustion.
+    (Previously ``allocate`` only checked raw exhaustion, so the
+    ``append_token`` path could silently drain the reserve that admission
+    control was counting on.)
+    """
 
     def __init__(self, num_blocks: int, block_size: int,
                  watermark: float = 0.01):
@@ -56,10 +73,18 @@ class BlockManager:
         self.block_size = block_size
         self.free: List[int] = list(range(num_blocks))
         self.tables: Dict[int, List[int]] = {}
+        self.refs: Dict[int, int] = {}           # live block -> ref count
         self.watermark_blocks = max(1, int(num_blocks * watermark))
         # bumped on every table mutation; lets the pool cache device-side
         # block tables and only re-upload when something actually changed
         self.version = 0
+        self.total_allocations = 0   # fresh blocks handed out (telemetry)
+        self.cow_copies = 0          # copy-on-write forks (telemetry)
+
+    @property
+    def free_blocks(self) -> int:
+        """Blocks on the free list (including the watermark reserve)."""
+        return len(self.free)
 
     def blocks_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
@@ -68,30 +93,106 @@ class BlockManager:
         return (len(self.free) - self.blocks_needed(n_tokens)
                 >= self.watermark_blocks)
 
-    def allocate(self, req_id: int, n_tokens: int) -> List[int]:
+    def allocate(self, req_id: int, n_tokens: int, *,
+                 allow_reserve: bool = False) -> List[int]:
         need = self.blocks_needed(n_tokens)
         if need > len(self.free):
             raise RuntimeError("KV pool exhausted")
+        if not allow_reserve and len(self.free) - need < self.watermark_blocks:
+            raise RuntimeError(
+                f"allocation of {need} blocks would drain the watermark "
+                f"reserve ({len(self.free)} free, {self.watermark_blocks} "
+                f"reserved); check can_allocate first or pass "
+                f"allow_reserve=True for the in-flight decode path")
         got = [self.free.pop() for _ in range(need)]
+        for b in got:
+            self.refs[b] = 1
+        self.total_allocations += need
         self.tables.setdefault(req_id, []).extend(got)
         self.version += 1
         return got
+
+    def share(self, req_id: int, blocks: Sequence[int]):
+        """Splice existing (cached) blocks into ``req_id``'s table.
+
+        The caller appends them *before* allocating any private suffix
+        blocks so logical order is preserved. Each shared block gains one
+        reference; the request's :meth:`release` drops it again.
+        """
+        for b in blocks:
+            self.refs[b] += 1
+        self.tables.setdefault(req_id, []).extend(blocks)
+        self.version += 1
+
+    def incref(self, block: int):
+        """Pin a live block (prefix-cache reference, not tied to a table)."""
+        self.refs[block] += 1
+
+    def decref(self, block: int) -> bool:
+        """Drop one reference; returns True when the block was freed."""
+        n = self.refs[block] - 1
+        if n > 0:
+            self.refs[block] = n
+            return False
+        del self.refs[block]
+        self.free.append(block)
+        return True
+
+    def ref_count(self, block: int) -> int:
+        return self.refs.get(block, 0)
 
     def needs_block(self, req_id: int, new_len: int) -> bool:
         """Would extending req_id to new_len tokens require a new block?"""
         return new_len > len(self.tables.get(req_id, ())) * self.block_size
 
+    def needs_cow(self, req_id: int, pos: int) -> bool:
+        """Would writing at ``pos`` hit a block shared with other owners?"""
+        table = self.tables.get(req_id, ())
+        idx = pos // self.block_size
+        return idx < len(table) and self.refs.get(table[idx], 0) > 1
+
     def append_token(self, req_id: int, new_len: int) -> Optional[int]:
-        """Ensure capacity for new_len tokens; returns a new block or None."""
+        """Ensure capacity for new_len tokens; returns a new block or None.
+
+        May dip into the watermark reserve: a running request must be able
+        to take its next token (that is what the reserve is *for*); the
+        engine preempts when even the reserve is gone.
+        """
         if self.needs_block(req_id, new_len):
             have = len(self.tables.get(req_id, ())) * self.block_size
-            return self.allocate(req_id, new_len - have)[0]
+            return self.allocate(req_id, new_len - have,
+                                 allow_reserve=True)[0]
         return None
 
+    def copy_on_write(self, req_id: int,
+                      block_idx: int) -> Optional[Tuple[int, int]]:
+        """Fork a shared block so ``req_id`` can write into it.
+
+        Returns ``(old, new)`` physical ids when a fork happened (the
+        caller must copy the pool contents), or None when the block is
+        already private. The fresh block may come from the watermark
+        reserve — an in-flight request's write, like ``append_token``.
+        """
+        table = self.tables[req_id]
+        old = table[block_idx]
+        if self.refs[old] <= 1:
+            return None
+        if not self.free:
+            raise RuntimeError("KV pool exhausted (copy-on-write)")
+        new = self.free.pop()
+        self.refs[new] = 1
+        self.refs[old] -= 1
+        self.total_allocations += 1
+        self.cow_copies += 1
+        table[block_idx] = new
+        self.version += 1
+        return old, new
+
     def release(self, req_id: int):
-        freed = self.tables.pop(req_id, [])
-        if freed:
-            self.free.extend(freed)
+        table = self.tables.pop(req_id, [])
+        for b in table:
+            self.decref(b)
+        if table:
             self.version += 1
 
     @property
@@ -195,9 +296,70 @@ class PagedKVCache:
         self.pool = jax.tree.map(s, self.pool, new_cache, self._is_kv,
                                  self._bdim)
 
-    def write_prefill(self, req_id: int, cache_one):
-        """Store a single request's prefill cache (batch dim == 1)."""
-        blocks = self.manager.tables[req_id]
+    def gather_prefix(self, blocks: Sequence[int], nb_pad: int):
+        """Materialize cached prefix K/V for a suffix-only prefill.
+
+        ``blocks`` are full physical blocks (typically spliced from the
+        prefix index) holding a prompt's first ``len(blocks)*block_size``
+        tokens. Returns a cache-shaped pytree of dense ``[.., 1, P, K,
+        hd]`` leaves with ``P = nb_pad * block_size``; table entries past
+        ``len(blocks)`` read the trash block and are masked out by the
+        attention layer via ``prefix_len``. Only KV (attention) leaves are
+        supported — prefix caching is gated to per-token-state configs.
+        """
+        table = np.full((nb_pad,), self.trash_block, np.int32)
+        table[:len(blocks)] = blocks
+        tbl = jnp.asarray(table)
+        P = nb_pad * self.block_size
+
+        def g(pool, is_kv, bdim):
+            if not is_kv:
+                raise NotImplementedError(
+                    "prefix gather over non-KV (dense-state) leaves: "
+                    "prefix caching requires per-token state")
+            if bdim == 1:                          # [L, NB, BS, K, hd]
+                v = pool[:, tbl]                   # [L, nb, BS, K, hd]
+                return v.reshape(v.shape[0], 1, P, *v.shape[3:])
+            v = pool[tbl]                          # [nb, BS, K, hd]
+            return v.reshape(1, P, *v.shape[2:])
+
+        return jax.tree.map(g, self.pool, self._is_kv, self._bdim)
+
+    def ensure_writable(self, req_id: int, pos: int):
+        """Copy-on-write fork of the block holding ``pos`` if it is shared.
+
+        No-op for private blocks (the common case — a dict lookup). When a
+        request is about to write into a block another owner also holds
+        (e.g. a partially filled tail block spliced from the prefix
+        cache), the block is forked: fresh physical block, contents
+        copied, table entry swapped, old block's ref dropped.
+        """
+        idx = pos // self.block_size
+        if not self.manager.needs_cow(req_id, pos):
+            return
+        old, new = self.manager.copy_on_write(req_id, idx)
+
+        def cp(pool, is_kv, bdim):
+            if not is_kv:
+                return pool
+            if bdim == 1:
+                return pool.at[:, new].set(pool[:, old])
+            return pool.at[new].set(pool[old])
+
+        self.pool = jax.tree.map(cp, self.pool, self._is_kv, self._bdim)
+
+    def write_prefill(self, req_id: int, cache_one, start_pos: int = 0):
+        """Store a single request's prefill cache (batch dim == 1).
+
+        ``start_pos`` (block-aligned) writes the view starting at that
+        token position — the suffix-only prefill path leaves the cached
+        prefix blocks untouched and fills only the request's own blocks.
+        """
+        if start_pos % self.block_size:
+            raise ValueError(
+                f"start_pos ({start_pos}) must be block-aligned "
+                f"(block_size={self.block_size})")
+        blocks = self.manager.tables[req_id][start_pos // self.block_size:]
         nb = len(blocks)
         S_cap = nb * self.block_size
         phys = jnp.asarray(blocks)

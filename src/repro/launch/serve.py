@@ -29,10 +29,23 @@ def main():
     ap.add_argument("--replicas", default="1",
                     help="'auto' = ReplicationPlanner decides")
     ap.add_argument("--policy", default="round-robin",
-                    choices=("round-robin", "jsq", "least-kv"))
+                    choices=("round-robin", "jsq", "least-kv",
+                             "prefix-affinity"))
     ap.add_argument("--cluster-mode", default="thread",
                     choices=("thread", "sync"))
     ap.add_argument("--ctx", type=int, default=331)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share KV blocks across prompts with a common "
+                         "prefix (radix prefix cache; skips redundant "
+                         "prefill and pool footprint)")
+    ap.add_argument("--shared-prefix-tenants", type=int, default=0,
+                    metavar="N",
+                    help="serve a shared-system-prompt workload (N "
+                         "tenants splitting --requests, 128-token shared "
+                         "prefix + 24-token suffix each) instead of "
+                         "independent ShareGPT-like prompts — the shape "
+                         "where --prefix-cache and the prefix-affinity "
+                         "policy actually pay off")
     args = ap.parse_args()
 
     import jax
@@ -83,9 +96,20 @@ def main():
         budget = 1 << 16
         ecfg = EngineConfig(max_batch=min(max_batch, 64),
                             kv_pool_tokens=(budget // n_rep) // 64 * 64,
-                            max_model_len=512, prefill_bucket=64)
-        reqs = sharegpt_like(args.requests, cfg.vocab_size, seed=0,
-                             mean_in=24, mean_out=32, max_len=256)
+                            max_model_len=512, prefill_bucket=64,
+                            prefix_cache=args.prefix_cache)
+        if args.shared_prefix_tenants > 0:
+            from repro.serving import shared_prefix_workload
+            # round per-tenant count up, then trim so exactly --requests
+            # are served (the interleaved tail drops evenly across tenants)
+            per = -(-args.requests // args.shared_prefix_tenants)
+            reqs = shared_prefix_workload(
+                args.shared_prefix_tenants, per, cfg.vocab_size,
+                prefix_len=128, suffix_len=24, max_new_tokens=16,
+                seed=0)[:args.requests]
+        else:
+            reqs = sharegpt_like(args.requests, cfg.vocab_size, seed=0,
+                                 mean_in=24, mean_out=32, max_len=256)
         if n_rep > 1:
             from repro.serving import ReplicatedCluster
             cluster = ReplicatedCluster.colocated(

@@ -212,25 +212,48 @@ def out_project(p, o, cfg: ArchConfig, rules: ShardingRules):
 def self_attn_seq(p, x, cfg: ArchConfig, rules: ShardingRules, *,
                   positions: jax.Array, causal: bool,
                   window: Optional[int] = None,
-                  lengths: Optional[jax.Array] = None
+                  lengths: Optional[jax.Array] = None,
+                  prefix_k: Optional[jax.Array] = None,
+                  prefix_v: Optional[jax.Array] = None,
+                  prefix_len: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Full-sequence self-attention (train / prefill). Returns (out, (K,V))."""
+    """Full-sequence self-attention (train / prefill). Returns (out, (K,V)).
+
+    With ``prefix_k/v`` (``[B, P_pad, K, hd]``, e.g. gathered from cached
+    KV-pool blocks) the sequence is treated as the *suffix* of a longer
+    prompt: queries attend over the concatenated [prefix || suffix] keys,
+    ``positions`` carry the absolute (prefix-offset) token positions, and
+    ``prefix_len`` (traced scalar) marks how many prefix rows are valid —
+    padding rows past it get kv id -1 and are masked out. ``lengths``
+    stays the *total* valid KV length per request. The returned cache
+    entry covers only the suffix (the prefix KV is already stored).
+    """
     B, S, _ = x.shape
     q, k, v = qkv_project(p, x, cfg, rules, positions)
+    k_all, v_all, q_off = k, v, 0
     kv_ids = jnp.arange(S)
+    if prefix_k is not None:
+        P = prefix_k.shape[1]
+        pl = jnp.asarray(prefix_len, jnp.int32)
+        ids_p = jnp.where(jnp.arange(P) < pl, jnp.arange(P), -1)
+        kv_ids = jnp.concatenate([ids_p, pl + jnp.arange(S)])
+        k_all = jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1)
+        q_off = pl
     mask_fn = _mask_builder(causal=causal, window=window, kv_ids=kv_ids,
                             lengths=lengths)
     if cfg.attn_kv_repeat and cfg.n_kv_heads < cfg.n_heads:
         # §Perf variant: expand K/V to all H heads (contiguous head shard)
         G = cfg.n_heads // cfg.n_kv_heads
         rep = lambda a: jnp.repeat(a, G, axis=2)
-        kr = constrain(rep(k), rules, (BATCH, None, HEADS, None))
-        vr = constrain(rep(v), rules, (BATCH, None, HEADS, None))
+        kr = constrain(rep(k_all), rules, (BATCH, None, HEADS, None))
+        vr = constrain(rep(v_all), rules, (BATCH, None, HEADS, None))
         qh = q.reshape(B, S, cfg.n_heads, 1, cfg.hd)
         qh = constrain(qh, rules, (BATCH, None, HEADS, None, None))
-        o = _attention_core(qh, kr, vr, mask_fn, cfg.q_block)
+        o = _attention_core(qh, kr, vr, mask_fn, cfg.q_block, q_offset=q_off)
     else:
-        o = _attention_core(q, k, v, mask_fn, cfg.q_block)
+        o = _attention_core(q, k_all, v_all, mask_fn, cfg.q_block,
+                            q_offset=q_off)
     o = o.reshape(B, S, cfg.n_heads, cfg.hd).reshape(B, S, -1)
     return out_project(p, o, cfg, rules), (k, v)
 

@@ -169,16 +169,21 @@ def _ffn_apply(bp, x, cfg, rules, capacity_factor):
 
 def block_apply_seq(kind: str, bp, x, cfg: ArchConfig, rules: ShardingRules,
                     *, positions, lengths, img_embeds, shared,
-                    capacity_factor: float, h0=None, conv0=None):
+                    capacity_factor: float, h0=None, conv0=None,
+                    prefix_entry=None, prefix_len=None):
     """Returns (x, cache_entry, aux)."""
     zero = jnp.zeros((), jnp.float32)
     if kind == SSM:
+        if prefix_entry is not None:
+            raise NotImplementedError("prefix KV reuse over SSM state")
         h, cache = ssm_mod.ssm_seq(bp["ssm"], norm_apply(bp["ln1"], x, cfg),
                                    cfg, rules, h0=h0, conv0=conv0)
         return x + h, cache, zero
     if kind == SHARED_ATTN:
         bp = shared
     if kind == CROSS:
+        if prefix_entry is not None:
+            raise NotImplementedError("prefix KV reuse over cross-attention")
         k, v = attn_mod.cross_attn_kv(bp["attn"], img_embeds, cfg, rules)
         h = attn_mod.cross_attn_apply(bp["attn"],
                                       norm_apply(bp["ln1"], x, cfg), k, v,
@@ -191,7 +196,10 @@ def block_apply_seq(kind: str, bp, x, cfg: ArchConfig, rules: ShardingRules,
     h, (k, v) = attn_mod.self_attn_seq(
         bp["attn"], norm_apply(bp["ln1"], x, cfg), cfg, rules,
         positions=positions, causal=cfg.causal, window=cfg.sliding_window,
-        lengths=lengths)
+        lengths=lengths,
+        prefix_k=None if prefix_entry is None else prefix_entry["k"],
+        prefix_v=None if prefix_entry is None else prefix_entry["v"],
+        prefix_len=prefix_len)
     x = x + h
     f, aux = _ffn_apply(bp["ffn"], norm_apply(bp["ln2"], x, cfg), cfg, rules,
                         capacity_factor)
@@ -240,16 +248,21 @@ def _embed_inputs(params, cfg, rules, batch, positions):
 
 
 def _stack_seq(params, x, cfg, rules, *, positions, lengths, img_embeds,
-               capacity_factor, init_state=None):
-    """Run all layers over a full sequence. Returns (x, cache, aux)."""
+               capacity_factor, init_state=None, prefix=None,
+               prefix_len=None):
+    """Run all layers over a full sequence. Returns (x, cache, aux).
+
+    ``prefix`` (cache-shaped pytree of dense per-layer K/V, stacked leaves
+    ``[L, 1, P, K, hd]``) rides the layer scan as *xs* so each layer
+    attends over its own cached prefix — the suffix-only prefill path.
+    """
     slots, n_rep, _ = plan_structure(cfg)
     plan = cfg.block_plan()
     shared = params.get("shared")
     aux_total = jnp.zeros((), jnp.float32)
 
-    def period_body(carry, xs):
+    def period_body(carry, slot_params, slot_caches_in, slot_prefix):
         x, aux = carry
-        slot_params, slot_caches_in = xs
         caches = []
         for j, kind in enumerate(slots):
             h0 = conv0 = None
@@ -259,24 +272,37 @@ def _stack_seq(params, x, cfg, rules, *, positions, lengths, img_embeds,
             x, cache, aux_j = block_apply_seq(
                 kind, slot_params[j], x, cfg, rules, positions=positions,
                 lengths=lengths, img_embeds=img_embeds, shared=shared,
-                capacity_factor=capacity_factor, h0=h0, conv0=conv0)
+                capacity_factor=capacity_factor, h0=h0, conv0=conv0,
+                prefix_entry=None if slot_prefix is None else slot_prefix[j],
+                prefix_len=prefix_len)
             caches.append(cache)
             aux = aux + aux_j
         return (x, aux), caches
 
     if n_rep > 0:
-        body = jax.checkpoint(lambda c, xs: period_body(c, (xs, None)))
-        (x, aux_total), caches = jax.lax.scan(
-            body, (x, aux_total), tuple(params["stack"]))
+        if prefix is not None:
+            body = jax.checkpoint(
+                lambda c, xs: period_body(c, xs[0], None, xs[1]))
+            (x, aux_total), caches = jax.lax.scan(
+                body, (x, aux_total),
+                (tuple(params["stack"]), tuple(prefix["stack"])))
+        else:
+            body = jax.checkpoint(lambda c, xs: period_body(c, xs, None,
+                                                            None))
+            (x, aux_total), caches = jax.lax.scan(
+                body, (x, aux_total), tuple(params["stack"]))
     else:
         caches = [None] * len(slots)
     rem_caches = []
     rem_plan = plan[n_rep * len(slots):]
-    for bp, kind in zip(params["rem"], rem_plan):
+    rem_prefix = prefix["rem"] if prefix is not None \
+        else [None] * len(params["rem"])
+    for bp, kind, pfx in zip(params["rem"], rem_plan, rem_prefix):
         x, cache, aux_j = block_apply_seq(
             kind, bp, x, cfg, rules, positions=positions, lengths=lengths,
             img_embeds=img_embeds, shared=shared,
-            capacity_factor=capacity_factor)
+            capacity_factor=capacity_factor, prefix_entry=pfx,
+            prefix_len=prefix_len)
         rem_caches.append(cache)
         aux_total = aux_total + aux_j
     x = norm_apply(params["final_norm"], x, cfg)
@@ -473,24 +499,43 @@ def loss(params, cfg: ArchConfig, rules: ShardingRules,
 
 
 def prefill(params, cfg: ArchConfig, rules: ShardingRules, batch: Dict,
-            cache_len: Optional[int] = None):
+            cache_len: Optional[int] = None, prefix=None, prefix_len=None):
     """Process a prompt. Returns (last_logits [B,V], cache, next_pos).
 
     With padded prompts pass ``batch['lengths']`` ([B] valid lengths); the
     logits are then taken at each request's last valid position.
+
+    Suffix-only prefill (prefix cache): with ``prefix`` (a cache-shaped
+    pytree of dense prefix K/V gathered from the paged pool, e.g.
+    :meth:`repro.kvcache.paged.PagedKVCache.gather_prefix`) and
+    ``prefix_len`` (valid prefix tokens, traced), ``batch['tokens']``
+    holds only the *suffix*: token positions are offset by ``prefix_len``
+    and attention runs over [prefix || suffix]. ``batch['lengths']`` stays
+    suffix-local (required in this mode). The returned cache covers only
+    the suffix.
     """
     some = batch.get("tokens", batch.get("embeds"))
     B, S = some.shape[0], some.shape[1]
-    positions = jnp.arange(S)
+    lengths = batch.get("lengths")
+    if prefix is not None:
+        if lengths is None:
+            raise ValueError("suffix prefill requires batch['lengths']")
+        pl = jnp.asarray(prefix_len, jnp.int32)
+        positions = pl + jnp.arange(S)
+        attn_lengths = lengths + pl       # mask sees total valid KV length
+    else:
+        pl = None
+        positions = jnp.arange(S)
+        attn_lengths = lengths
     x = _embed_inputs(params, cfg, rules, batch, positions)
     # prefill dispatches S tokens/request: use the train-style capacity
     # factor (the generous serve factor is for single-token decode steps)
     cf = cfg.moe.capacity_factor if cfg.moe else 1.0
     x, cache, _ = _stack_seq(params, x, cfg, rules, positions=positions,
-                             lengths=batch.get("lengths"),
+                             lengths=attn_lengths,
                              img_embeds=batch.get("img_embeds"),
-                             capacity_factor=cf)
-    lengths = batch.get("lengths")
+                             capacity_factor=cf, prefix=prefix,
+                             prefix_len=pl)
     if lengths is not None:
         last = x[jnp.arange(B), lengths - 1][:, None, :]
     else:
@@ -601,8 +646,10 @@ class Model:
     def forward(self, params, batch):
         return forward(params, self.cfg, self.rules, batch)
 
-    def prefill(self, params, batch, cache_len=None):
-        return prefill(params, self.cfg, self.rules, batch, cache_len)
+    def prefill(self, params, batch, cache_len=None, prefix=None,
+                prefix_len=None):
+        return prefill(params, self.cfg, self.rules, batch, cache_len,
+                       prefix=prefix, prefix_len=prefix_len)
 
     def decode_step(self, params, cache, tokens, pos, lengths=None,
                     embeds=None):

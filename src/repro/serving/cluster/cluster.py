@@ -257,7 +257,9 @@ class ReplicatedCluster:
         for rep in self.replicas:
             eng = rep.engine
             m = collect(rep.requests, wall, eng.itl_samples,
-                        eng.max_kv_fraction, eng.batch_samples)
+                        eng.max_kv_fraction, eng.batch_samples,
+                        kv_samples=eng.kv_fraction_samples,
+                        prefix=eng.prefix.stats if eng.prefix else None)
             busy = sum(eng.itl_samples) / max(wall, 1e-9)
             qmax = max((q[rep.idx] for q in self.queue_samples), default=0)
             per_replica.append(ReplicaStats(

@@ -53,6 +53,13 @@ class ClusterMetrics:
     mean_queue_depth: float
     max_queue_depth: int
     per_replica: List[ReplicaStats]
+    # KV pool occupancy across replicas (peak of peaks / mean of means)
+    peak_kv_fraction: float = 0.0
+    mean_kv_fraction: float = 0.0
+    # prefix-cache reuse pooled across replicas (0 / zeros when off)
+    prefix_hit_rate: float = 0.0
+    prefill_tokens_skipped: int = 0
+    prefix_blocks_shared: int = 0
 
     @property
     def throughput(self) -> float:
@@ -86,7 +93,14 @@ class ClusterMetrics:
                  f"  ITL  {self.itl.row()}",
                  f"  E2E  {self.e2e.row(scale=1.0, unit='s')}",
                  f"  queue depth: mean={self.mean_queue_depth:.1f} "
-                 f"max={self.max_queue_depth}"]
+                 f"max={self.max_queue_depth}",
+                 f"  KV pool: peak={self.peak_kv_fraction*100:.1f}% "
+                 f"mean={self.mean_kv_fraction*100:.1f}%"]
+        if self.prefill_tokens_skipped or self.prefix_hit_rate:
+            lines.append(
+                f"  prefix cache: hit_rate={self.prefix_hit_rate*100:.1f}% "
+                f"skipped={self.prefill_tokens_skipped} tok "
+                f"shared={self.prefix_blocks_shared} blk")
         lines += [f"  {r.row()}" for r in self.per_replica]
         return "\n".join(lines)
 
@@ -98,6 +112,12 @@ def aggregate(per_replica: List[ReplicaStats], *, wall_s: float, policy: str,
     """Fold per-replica stats + pooled latency samples into one view."""
     depth = np.asarray([sum(q) for q in queue_samples], float) \
         if queue_samples else np.zeros(0)
+    pfx = [r.metrics.prefix for r in per_replica
+           if r.metrics.prefix is not None]
+    prompt_toks = sum(p.prompt_tokens for p in pfx)
+    hit_toks = sum(p.hit_tokens for p in pfx)
+    kv_means = [r.metrics.kv_used_mean for r in per_replica
+                if r.metrics.kv_used_series]
     return ClusterMetrics(
         wall_s=wall_s,
         n_replicas=len(per_replica),
@@ -112,4 +132,10 @@ def aggregate(per_replica: List[ReplicaStats], *, wall_s: float, policy: str,
         e2e=Percentiles.from_samples(e2e_samples),
         mean_queue_depth=float(depth.mean()) if depth.size else 0.0,
         max_queue_depth=int(depth.max()) if depth.size else 0,
-        per_replica=per_replica)
+        per_replica=per_replica,
+        peak_kv_fraction=max((r.metrics.max_kv_fraction
+                              for r in per_replica), default=0.0),
+        mean_kv_fraction=float(np.mean(kv_means)) if kv_means else 0.0,
+        prefix_hit_rate=hit_toks / prompt_toks if prompt_toks else 0.0,
+        prefill_tokens_skipped=hit_toks,
+        prefix_blocks_shared=sum(p.blocks_shared for p in pfx))

@@ -18,6 +18,7 @@ deterministic for the cluster's sync test mode.
 from __future__ import annotations
 
 import abc
+from collections import OrderedDict
 from typing import Dict, List, Sequence, Type, Union
 
 from repro.serving.workload import Request
@@ -77,8 +78,55 @@ class LeastKVLoad(RouterPolicy):
                    key=lambda i: (replicas[i].kv_load, replicas[i].load, i))
 
 
+class PrefixAffinity(RouterPolicy):
+    """Route prompts sharing a prefix to the replica that cached it.
+
+    Each engine's prefix index is per-replica, so a tenant's shared
+    system prompt only pays prefill (and pool blocks) on the replicas it
+    actually lands on — spraying one tenant across all R replicas costs
+    R cold prefills and R copies of the cached blocks. The policy keeps a
+    sticky map from the hash of the first ``affinity_tokens`` prompt
+    tokens to a home replica; new keys go to the least-loaded replica
+    (JSQ). Affinity must not buy unbounded queueing: when the home
+    replica is more than ``max_skew`` requests above the least-loaded
+    one, the request (and the key's home) migrate there — the new home
+    rebuilds the prefix on first miss and stays local thereafter.
+
+    Deterministic for a fixed arrival order (ties break to the lowest
+    index), like the other policies.
+    """
+
+    name = "prefix-affinity"
+
+    def __init__(self, affinity_tokens: int = 64, max_skew: int = 8,
+                 max_keys: int = 4096):
+        self.affinity_tokens = affinity_tokens
+        self.max_skew = max_skew
+        self.max_keys = max_keys
+        self._home: "OrderedDict[bytes, int]" = OrderedDict()
+
+    def choose(self, req: Request, replicas: Sequence) -> int:
+        key = req.prompt[:self.affinity_tokens].tobytes()
+        loads = [r.load for r in replicas]
+        least = min(range(len(replicas)), key=lambda i: (loads[i], i))
+        idx = self._home.get(key)
+        if idx is not None and idx < len(replicas) \
+                and loads[idx] - loads[least] <= self.max_skew:
+            self._home.move_to_end(key)
+            return idx
+        self._home[key] = least
+        self._home.move_to_end(key)
+        while len(self._home) > self.max_keys:
+            self._home.popitem(last=False)
+        return least
+
+    def reset(self):
+        self._home.clear()
+
+
 POLICIES: Dict[str, Type[RouterPolicy]] = {
-    cls.name: cls for cls in (RoundRobin, JoinShortestQueue, LeastKVLoad)}
+    cls.name: cls for cls in (RoundRobin, JoinShortestQueue, LeastKVLoad,
+                              PrefixAffinity)}
 
 
 def make_policy(policy: Union[str, RouterPolicy]) -> RouterPolicy:

@@ -26,6 +26,14 @@ If the pool runs out of blocks mid-decode, the engine preempts (requeues)
 the youngest running requests — recompute-style, like vLLM — instead of
 crashing; deterministic greedy decode regenerates identical tokens.
 
+With ``EngineConfig.prefix_cache`` the engine consults a radix
+:class:`~repro.kvcache.prefix.PrefixIndex` at admission: a prompt's
+longest cached full-block prefix is *spliced* into its block table
+(ref-counted shared blocks — no copy) and only the uncached suffix is
+prefilled, attending over the gathered prefix K/V. Cached blocks whose
+last request released them stay warm in the index and are LRU-evicted
+when admission or mid-decode appends need blocks back.
+
 The engine is the *measured-curves* source for BCA: sweeping ``max_batch``
 on a fixed workload yields T(B)/L(B)/KV(B) exactly like the paper's
 online-mode evaluation (Sec. IV), with real compute on CPU for reduced
@@ -45,6 +53,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.kvcache.paged import PagedKVCache
+from repro.kvcache.prefix import PrefixIndex, PrefixStats, \
+    prefix_cache_supported
 from repro.kvcache.view import PagedCacheView
 from repro.models.model import Model
 from repro.serving.metrics import ServingMetrics, collect
@@ -61,6 +71,14 @@ class EngineConfig:
     # "paged" = zero-copy block-table decode (default);
     # "gather" = legacy dense-copy fallback (forced for sliding windows)
     decode_mode: str = "paged"
+    # radix prefix cache: share full KV blocks across prompts with a
+    # common prefix (skips their prefill + their pool footprint). Opt-in;
+    # silently downgraded (reason recorded) for configs whose state is not
+    # per-token addressable — see kvcache.prefix.prefix_cache_supported.
+    prefix_cache: bool = False
+    # cap on cached blocks held by the index (None = bounded only by
+    # LRU eviction under the pool watermark)
+    prefix_cache_blocks: Optional[int] = None
 
     def __post_init__(self):
         """Fail loudly at construction instead of as a downstream shape
@@ -92,6 +110,11 @@ class EngineConfig:
             raise ValueError(
                 f"decode_mode must be 'paged' or 'gather', "
                 f"got {self.decode_mode!r}")
+        if self.prefix_cache_blocks is not None \
+                and self.prefix_cache_blocks < 1:
+            raise ValueError(
+                f"prefix_cache_blocks must be >= 1 (or None for "
+                f"unbounded), got {self.prefix_cache_blocks}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +133,7 @@ class StepFunctions:
     prefill: Callable
     decode: Callable
     paged: Callable
+    prefix_prefill: Callable
 
     @classmethod
     def build(cls, model: Model, block_size: int) -> "StepFunctions":
@@ -123,7 +147,9 @@ class StepFunctions:
                             static_argnames=("cache_len",)),
             decode=jax.jit(partial(_decode_fn, model)),
             paged=jax.jit(partial(_paged_decode_fn, model, block_size),
-                          donate_argnums=donate))
+                          donate_argnums=donate),
+            prefix_prefill=jax.jit(partial(_prefix_prefill_fn, model),
+                                   static_argnames=("cache_len",)))
 
 
 def _bucket(n: int, b: int) -> int:
@@ -171,6 +197,18 @@ class ContinuousBatchingEngine:
         self._prefill_jit = self._steps.prefill
         self._decode_jit = self._steps.decode
         self._paged_jit = self._steps.paged
+        self._prefix_prefill_jit = self._steps.prefix_prefill
+        # radix prefix cache (opt-in, and only for configs whose KV is
+        # per-token addressable — SSM/cross/MoE/window configs downgrade)
+        self.prefix: Optional[PrefixIndex] = None
+        self.prefix_disabled_reason: Optional[str] = None
+        if ecfg.prefix_cache:
+            ok, why = prefix_cache_supported(self.cfg)
+            if ok:
+                self.prefix = PrefixIndex(
+                    self.pool.manager, max_blocks=ecfg.prefix_cache_blocks)
+            else:
+                self.prefix_disabled_reason = why
         # wall clock for request timestamps (seconds since serving start);
         # run() installs one, a cluster driving step() directly installs a
         # shared cluster-wide clock so replica timelines are comparable
@@ -178,8 +216,10 @@ class ContinuousBatchingEngine:
         # telemetry
         self.itl_samples: List[float] = []
         self.batch_samples: List[int] = []
+        self.kv_fraction_samples: List[float] = []
         self.max_kv_fraction = 0.0
         self.preemptions = 0
+        self.prefill_tokens_computed = 0
 
     # ------------------------------------------------------------- admin --
     def add_request(self, req: Request):
@@ -187,25 +227,62 @@ class ContinuousBatchingEngine:
 
     def reset_stats(self):
         """Clear accumulated telemetry (e.g. after a warmup workload) so
-        the next run's metrics aren't polluted by compile-time samples."""
+        the next run's metrics aren't polluted by compile-time samples.
+        The prefix index keeps its *contents* (a warm cache is the point
+        of a warmup) — only its counters reset."""
         self.itl_samples = []
         self.batch_samples = []
+        self.kv_fraction_samples = []
         self.max_kv_fraction = 0.0
         self.preemptions = 0
+        self.prefill_tokens_computed = 0
+        self.pool.manager.total_allocations = 0
+        self.pool.manager.cow_copies = 0
+        if self.prefix is not None:
+            self.prefix.stats = PrefixStats()
 
     def _now(self, fallback: float) -> float:
         return self.clock() if self.clock is not None else fallback
 
     def _admit(self, now: float):
+        mgr = self.pool.manager
         while (self.waiting and len(self.running) < self.ecfg.max_batch
                and self.waiting[0].arrival_s <= now):
             req = self.waiting[0]
-            need = req.prompt_len + 1
-            if not self.pool.manager.can_allocate(need):
+            # the prefix cache turns part of the prompt into shared blocks:
+            # only the uncached suffix consumes free blocks. Pin the hit
+            # with bare increfs *before* any eviction can reclaim the
+            # matched nodes — incref doesn't touch tables/version, so a
+            # capacity-blocked head request retrying every step does not
+            # invalidate the cached device block-table upload.
+            hit: List[int] = []
+            if self.prefix is not None:
+                hit = self.prefix.match(req.prompt)
+                for b in hit:
+                    mgr.incref(b)
+            n_cached = len(hit) * self.ecfg.block_size
+            need_new = mgr.blocks_needed(req.prompt_len + 1) - len(hit)
+            short = need_new + mgr.watermark_blocks - mgr.free_blocks
+            # only flush warm cache entries when eviction can plausibly
+            # close the whole gap (cached_blocks is an upper bound on the
+            # evictable count) — an oversized head request must not wipe
+            # other tenants' cached prefixes just to stay queued anyway
+            if self.prefix is not None \
+                    and 0 < short <= self.prefix.cached_blocks:
+                self.prefix.evict(short)
+            if mgr.free_blocks - need_new < mgr.watermark_blocks:
+                for b in hit:               # unpin (cache ref remains)
+                    mgr.decref(b)
                 break
             self.waiting.popleft()
-            self.pool.manager.allocate(req.req_id, need)
-            self._prefill(req)
+            if hit:
+                mgr.share(req.req_id, hit)
+                for b in hit:               # table ref replaces the pin
+                    mgr.decref(b)
+            mgr.allocate(req.req_id, req.prompt_len + 1 - n_cached)
+            if self.prefix is not None:
+                self.prefix.record_admit(req.prompt_len, n_cached)
+            self._prefill(req, n_cached=n_cached)
             # prefill emitted the first output token (int() inside it
             # synced), so TTFT is stamped here, not at the first decode
             # step. `now` can be ahead of the wall clock when the caller
@@ -215,21 +292,46 @@ class ContinuousBatchingEngine:
             req.t_first_token = max(now, self._now(now))
             self.running.append(req)
 
-    def _prefill(self, req: Request):
-        S = _bucket(req.prompt_len, self.ecfg.prefill_bucket)
-        toks = np.zeros((1, S), np.int32)
-        toks[0, :req.prompt_len] = req.prompt
-        batch = {"tokens": jnp.asarray(toks),
-                 "lengths": jnp.asarray([req.prompt_len], jnp.int32)}
-        if self.cfg.arch_type == "vlm":
-            batch["img_embeds"] = jnp.zeros(
-                (1, self.cfg.n_img_tokens, self.cfg.d_model),
-                self.cfg.activation_dtype)
-        logits, cache, _ = self._prefill_jit(self.params, batch, cache_len=S)
-        self.pool.write_prefill(req.req_id, cache)
+    def _prefill(self, req: Request, n_cached: int = 0):
+        rid = req.req_id
+        if n_cached:
+            # suffix-only prefill: gather the cached prefix K/V once and
+            # compute only the uncached tail, writing its KV into the
+            # request's own (non-shared) blocks
+            sfx_len = req.prompt_len - n_cached
+            S = _bucket(sfx_len, self.ecfg.prefill_bucket)
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :sfx_len] = req.prompt[n_cached:]
+            batch = {"tokens": jnp.asarray(toks),
+                     "lengths": jnp.asarray([sfx_len], jnp.int32)}
+            nb_cached = n_cached // self.ecfg.block_size
+            nb_pad = _pow2_bucket(nb_cached, lo=1)
+            prefix_kv = self.pool.gather_prefix(
+                self.pool.manager.tables[rid][:nb_cached], nb_pad)
+            logits, cache, _ = self._prefix_prefill_jit(
+                self.params, batch, prefix_kv, jnp.int32(n_cached),
+                cache_len=S)
+            self.pool.write_prefill(rid, cache, start_pos=n_cached)
+        else:
+            S = _bucket(req.prompt_len, self.ecfg.prefill_bucket)
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :req.prompt_len] = req.prompt
+            batch = {"tokens": jnp.asarray(toks),
+                     "lengths": jnp.asarray([req.prompt_len], jnp.int32)}
+            if self.cfg.arch_type == "vlm":
+                batch["img_embeds"] = jnp.zeros(
+                    (1, self.cfg.n_img_tokens, self.cfg.d_model),
+                    self.cfg.activation_dtype)
+            logits, cache, _ = self._prefill_jit(self.params, batch,
+                                                 cache_len=S)
+            self.pool.write_prefill(rid, cache)
+        self.prefill_tokens_computed += req.prompt_len - n_cached
+        if self.prefix is not None:
+            # register the prompt's full blocks (prefix + own) for reuse
+            self.prefix.insert(req.prompt, self.pool.manager.tables[rid])
         tok = int(jnp.argmax(logits[0]))
-        self._tokens[req.req_id] = tok
-        self._pos[req.req_id] = req.prompt_len
+        self._tokens[rid] = tok
+        self._pos[rid] = req.prompt_len
         req.generated = 1       # prefill produced the first output token
         req.output_tokens.append(tok)
 
@@ -249,17 +351,28 @@ class ContinuousBatchingEngine:
     def _ensure_step_capacity(self):
         """Make sure every running request can take this step's token.
 
-        ``BlockManager.append_token`` bypasses the admission watermark, so
-        a request crossing a block boundary with an empty free list used
-        to raise mid-step. Instead: preempt the *youngest* running
-        requests (their blocks free immediately) until the survivors fit.
+        ``BlockManager.append_token`` may dip into the admission
+        watermark reserve, so a request crossing a block boundary (or
+        needing a copy-on-write fork of a shared tail block) with an
+        empty free list would raise mid-step. Instead: first reclaim
+        cache-only blocks from the prefix index (cold cached prefixes are
+        the cheapest memory in the pool), then preempt the *youngest*
+        running requests (their blocks free immediately) until the
+        survivors fit.
         """
         mgr = self.pool.manager
         while True:
-            need = sum(1 for r in self.running
-                       if mgr.needs_block(r.req_id, self._pos[r.req_id] + 1))
-            if need <= len(mgr.free):
+            need = 0
+            for r in self.running:
+                pos = self._pos[r.req_id]
+                if mgr.needs_block(r.req_id, pos + 1) \
+                        or mgr.needs_cow(r.req_id, pos):
+                    need += 1
+            if need <= mgr.free_blocks:
                 return
+            if self.prefix is not None \
+                    and self.prefix.evict(need - mgr.free_blocks):
+                continue
             if len(self.running) <= 1:
                 raise RuntimeError(
                     "KV pool exhausted: a single request exceeds pool "
@@ -276,9 +389,15 @@ class ContinuousBatchingEngine:
         self._ensure_step_capacity()
         reqs = self.running                    # preemption may have shrunk it
         rids = [r.req_id for r in reqs]
-        # ensure capacity for the token being written this step
+        # ensure capacity for the token being written this step, and fork
+        # (copy-on-write) any shared block the write would land in. The
+        # COW case is unreachable for engine-spliced prefixes (match()
+        # shares only full blocks below prompt_len, and writes start at
+        # prompt_len), so this is a two-dict-lookup guard for direct
+        # pool.share users and future partial-tail sharing.
         for rid in rids:
             self.pool.manager.append_token(rid, self._pos[rid] + 1)
+            self.pool.ensure_writable(rid, self._pos[rid])
         if self.decode_mode == "paged":
             next_tokens = self._decode_paged(rids)
         else:
@@ -286,6 +405,7 @@ class ContinuousBatchingEngine:
         dt = time.perf_counter() - t0
         self.itl_samples.append(dt)
         self.batch_samples.append(len(reqs))
+        self.kv_fraction_samples.append(self.pool.manager.used_fraction)
         self.max_kv_fraction = max(self.max_kv_fraction,
                                    self.pool.manager.used_fraction)
         # bookkeeping
@@ -355,11 +475,22 @@ class ContinuousBatchingEngine:
             now = max(now, time.perf_counter() - t_start)
         wall = time.perf_counter() - t_start
         return collect(requests, wall, self.itl_samples,
-                       self.max_kv_fraction, self.batch_samples)
+                       self.max_kv_fraction, self.batch_samples,
+                       kv_samples=self.kv_fraction_samples,
+                       prefix=self.prefix.stats if self.prefix else None)
 
 
 def _prefill_fn(model: Model, params, batch, cache_len: int):
     return model.prefill(params, batch, cache_len=cache_len)
+
+
+def _prefix_prefill_fn(model: Model, params, batch, prefix_kv, prefix_len,
+                       cache_len: int):
+    """Suffix-only prefill against gathered prefix K/V (jitted; compile
+    cache keyed on the bucketed suffix length and prefix-pad width —
+    ``prefix_len`` itself is traced, so hit depth doesn't recompile)."""
+    return model.prefill(params, batch, cache_len=cache_len,
+                         prefix=prefix_kv, prefix_len=prefix_len)
 
 
 def _decode_fn(model: Model, params, view, tokens, pos):

@@ -1,13 +1,17 @@
 """Serving metrics: throughput, ITL, TTFT, E2E, KV usage (paper Tables
 I/IV), with tail-latency percentiles so router policies in the cluster
-subsystem can be compared on p95/p99 behaviour, not just mean throughput."""
+subsystem can be compared on p95/p99 behaviour, not just mean throughput.
+KV pool occupancy is kept as a per-step time series (plus peak/mean), and
+prefix-cache runs attach their reuse counters — hit rate is the input the
+BCA hooks use to size B_opt from *effective* per-request KV footprint."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.kvcache.prefix import PrefixStats
 from repro.serving.workload import Request
 
 
@@ -47,6 +51,12 @@ class ServingMetrics:
     ttft: Percentiles = dataclasses.field(default_factory=Percentiles)
     itl: Percentiles = dataclasses.field(default_factory=Percentiles)
     e2e: Percentiles = dataclasses.field(default_factory=Percentiles)
+    # KV pool occupancy over the run (per decode step) + its mean; the
+    # peak is max_kv_fraction above
+    kv_used_mean: float = 0.0
+    kv_used_series: List[float] = dataclasses.field(default_factory=list)
+    # prefix-cache reuse counters (None when the cache was off)
+    prefix: Optional[PrefixStats] = None
 
     @property
     def throughput(self) -> float:
@@ -57,9 +67,12 @@ class ServingMetrics:
         return self.output_tokens / max(self.wall_s, 1e-9)
 
     def row(self) -> str:
-        return (f"T={self.throughput:.1f} tok/s  ITL={self.itl_s*1e3:.2f} ms  "
-                f"E2E={self.e2e_s:.2f} s  KV_max={self.max_kv_fraction*100:.1f}%  "
-                f"avgB={self.avg_batch:.1f}")
+        s = (f"T={self.throughput:.1f} tok/s  ITL={self.itl_s*1e3:.2f} ms  "
+             f"E2E={self.e2e_s:.2f} s  KV_max={self.max_kv_fraction*100:.1f}%  "
+             f"avgB={self.avg_batch:.1f}")
+        if self.prefix is not None:
+            s += f"  pfx_hit={self.prefix.hit_rate*100:.0f}%"
+        return s
 
     def latency_row(self) -> str:
         return (f"TTFT {self.ttft.row()}  ITL {self.itl.row()}  "
@@ -67,8 +80,9 @@ class ServingMetrics:
 
 
 def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
-            max_kv_fraction: float, batch_samples: List[int]
-            ) -> ServingMetrics:
+            max_kv_fraction: float, batch_samples: List[int],
+            kv_samples: Optional[Sequence[float]] = None,
+            prefix: Optional[PrefixStats] = None) -> ServingMetrics:
     done = [r for r in requests if r.t_done is not None]
     total_in = sum(r.prompt_len for r in done)
     total_out = sum(r.generated for r in done)
@@ -87,4 +101,7 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
         ttft_s=float(np.mean(ttft)) if ttft else 0.0,
         ttft=Percentiles.from_samples(ttft),
         itl=Percentiles.from_samples(itl_samples),
-        e2e=Percentiles.from_samples(e2e))
+        e2e=Percentiles.from_samples(e2e),
+        kv_used_mean=float(np.mean(kv_samples)) if kv_samples else 0.0,
+        kv_used_series=list(kv_samples) if kv_samples else [],
+        prefix=prefix)

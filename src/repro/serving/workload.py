@@ -77,6 +77,57 @@ def arrival_times(n: int, rate: float, *, pattern: str = "poisson",
     return np.cumsum(rng.exponential(scale, size=n) / ramp)
 
 
+def shared_prefix_workload(n_tenants: int, per_tenant: int, vocab: int, *,
+                           prefix_len: int = 256, suffix_len: int = 32,
+                           max_new_tokens: int = 16, seed: int = 0,
+                           arrival_rate: Optional[float] = None,
+                           arrival_pattern: str = "poisson",
+                           burst_size: int = 8,
+                           interleave: bool = True) -> List[Request]:
+    """Shared-system-prompt workload: N tenants x M requests.
+
+    Each tenant has one random ``prefix_len``-token system prompt; every
+    request appends its own random ``suffix_len``-token tail. This is the
+    prefix cache's target shape (and its worst case when disabled: the
+    same prefix KV recomputed and stored M times per tenant).
+
+    ``interleave=True`` plays tenants round-robin (request i of every
+    tenant, then request i+1, ...), so a warm cache sees hits immediately
+    after each tenant's first prefill; ``False`` plays tenants
+    back-to-back. Arrivals default to t=0 (offline batch); pass
+    ``arrival_rate`` (+ pattern) for timed streams.
+    """
+    if n_tenants < 1 or per_tenant < 1:
+        raise ValueError(f"need >= 1 tenant and >= 1 request/tenant, got "
+                         f"{n_tenants} x {per_tenant}")
+    if prefix_len < 1 or suffix_len < 1:
+        raise ValueError(f"prefix_len and suffix_len must be >= 1, got "
+                         f"{prefix_len}/{suffix_len}")
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, size=prefix_len).astype(np.int32)
+                for _ in range(n_tenants)]
+    if interleave:
+        order = [(t, j) for j in range(per_tenant)
+                 for t in range(n_tenants)]
+    else:
+        order = [(t, j) for t in range(n_tenants)
+                 for j in range(per_tenant)]
+    n = len(order)
+    arrivals = np.zeros(n)
+    if arrival_rate:
+        arrivals = arrival_times(n, arrival_rate, pattern=arrival_pattern,
+                                 rng=np.random.default_rng((seed, 1)),
+                                 burst_size=burst_size)
+    reqs = []
+    for i, (t, _) in enumerate(order):
+        suffix = rng.integers(0, vocab, size=suffix_len).astype(np.int32)
+        prompt = np.concatenate([prefixes[t], suffix])
+        reqs.append(Request(req_id=i, prompt=prompt,
+                            max_new_tokens=max_new_tokens,
+                            arrival_s=float(arrivals[i])))
+    return reqs
+
+
 def sharegpt_like(n: int, vocab: int, *, seed: int = 0,
                   mean_in: int = SHAREGPT_MEAN_IN,
                   mean_out: int = SHAREGPT_MEAN_OUT,

@@ -1,0 +1,301 @@
+"""Prefix cache subsystem: radix index semantics, engine integration
+(shared-prefix reuse must be invisible to greedy decode), LRU eviction
+under memory pressure, the prefix-affinity router policy, the shared-
+prefix workload generator, and the BCA effective-footprint hooks."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kvcache.paged import BlockManager
+from repro.kvcache.prefix import PrefixIndex, prefix_cache_supported
+from repro.models.model import Model, init_params
+from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                           ReplicatedCluster, shared_prefix_workload)
+from repro.serving.cluster.router import PrefixAffinity, make_policy
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, rules, **kw):
+    ecfg = EngineConfig(**{**dict(max_batch=4, block_size=16,
+                                  kv_pool_tokens=8192, max_model_len=256,
+                                  prefill_bucket=32, prefix_cache=True),
+                           **kw})
+    return ContinuousBatchingEngine(Model(cfg, rules), params, ecfg)
+
+
+# ------------------------------------------------------------ the index --
+def test_index_match_insert_full_blocks_only():
+    bm = BlockManager(32, 4)
+    idx = PrefixIndex(bm)
+    toks = np.arange(11)                     # 2 full blocks + 3-token tail
+    blocks = bm.allocate(0, 11)              # 3 blocks
+    assert idx.insert(toks, blocks) == 2     # tail block never indexed
+    assert idx.cached_blocks == 2
+    # identical prompt: matched, capped at prompt_len - 1 -> 2 blocks
+    assert idx.match(toks) == blocks[:2]
+    # prompt == one full cached block exactly: cap leaves 1 block -> 0
+    assert idx.match(toks[:4]) == []
+    assert idx.match(toks[:9]) == blocks[:2]
+    # diverging second block: only the first matches
+    other = np.concatenate([toks[:4], [99, 99, 99, 99, 1]])
+    assert idx.match(other) == blocks[:1]
+    # re-insert of the same prompt adds nothing, keeps first writer
+    blocks2 = bm.allocate(1, 11)
+    assert idx.insert(toks, blocks2) == 0
+    assert idx.match(toks) == blocks[:2]
+
+
+def test_index_eviction_lru_and_pinning():
+    bm = BlockManager(32, 4)
+    idx = PrefixIndex(bm)
+    a = bm.allocate(0, 8)                    # 2 blocks
+    idx.insert(np.arange(8), a)
+    b = bm.allocate(1, 8)
+    idx.insert(np.arange(100, 108), b)
+    bm.release(0)
+    bm.release(1)
+    idx.match(np.arange(9))                  # touch both A nodes: B is LRU
+    assert idx.evict(1) == 1
+    assert idx.match(np.arange(100, 109)) == b[:1]   # B's leaf went first
+    assert idx.match(np.arange(9)) == a              # A intact
+    # pinned blocks (a request still holds them) are not evictable
+    bm.share(2, a)
+    assert idx.evict(10) == 1                # b's remaining node only
+    assert idx.cached_blocks == 2            # a0, a1 survive (pinned)
+    bm.release(2)
+    assert idx.evict(10) == 2
+    assert idx.cached_blocks == 0
+    assert bm.free_blocks == 32
+
+
+def test_index_max_blocks_cap():
+    bm = BlockManager(32, 4)
+    idx = PrefixIndex(bm, max_blocks=2)
+    blocks = bm.allocate(0, 16)
+    # wants 4 nodes; the cap stops growth at 2 (nothing evictable: the
+    # request still pins its blocks, so evict-on-insert frees none)
+    idx.insert(np.arange(16), blocks)
+    bm.release(0)
+    assert idx.cached_blocks == 2
+
+
+def test_index_cap_insert_never_evicts_attachment_point():
+    """Regression: extending a cached chain at the cap used to evict the
+    very leaf being extended, attaching the new node to a detached parent
+    and leaking its pinned block forever."""
+    bm = BlockManager(32, 4)
+    idx = PrefixIndex(bm, max_blocks=2)
+    a = np.arange(8)
+    blocks = bm.allocate(0, 8)               # 2 blocks -> nodes a0, a1
+    idx.insert(a, blocks)
+    bm.release(0)                            # both nodes cache-only now
+    longer = np.concatenate([a, np.arange(50, 54)])
+    tail = bm.allocate(1, 4)                 # the extension's own block
+    n_before = idx.cached_blocks
+    idx.insert(longer, list(blocks) + tail)  # cap must block the growth
+    bm.release(1)
+    # the existing chain stays attached (a1 was NOT evicted from under
+    # the insert) and everything remains reachable and reclaimable
+    assert idx.match(np.concatenate([a, [0]])) == list(blocks)
+    assert idx.cached_blocks == n_before
+    idx.clear()
+    assert idx.cached_blocks == 0
+    assert bm.refs == {}
+    assert bm.free_blocks == 32              # nothing leaked
+
+
+def test_supported_gating():
+    assert prefix_cache_supported(reduced(get_config("opt-1.3b")))[0]
+    for arch in ("mamba2-1.3b", "zamba2-7b"):       # SSM state
+        ok, why = prefix_cache_supported(reduced(get_config(arch)))
+        assert not ok and why
+
+
+# ------------------------------------------------------ engine semantics --
+def test_engine_outputs_identical_with_cache(setup, rules):
+    """The acceptance property: greedy outputs must be bit-identical with
+    the prefix cache on and off, while prefill work and fresh block
+    allocations drop by >= 2x on a shared-prefix workload."""
+    cfg, params = setup
+    outs, stats = {}, {}
+    for on in (False, True):
+        eng = _engine(cfg, params, rules, prefix_cache=on)
+        reqs = shared_prefix_workload(2, 4, cfg.vocab_size, prefix_len=48,
+                                      suffix_len=16, max_new_tokens=6,
+                                      seed=0)
+        m = eng.run(reqs)
+        assert all(r.t_done is not None for r in reqs)
+        outs[on] = [r.output_tokens for r in reqs]
+        stats[on] = (eng.prefill_tokens_computed,
+                     eng.pool.manager.total_allocations, m)
+    assert outs[True] == outs[False]
+    assert stats[False][0] >= 2 * stats[True][0]
+    assert stats[False][1] >= 1.5 * stats[True][1]
+    m_on = stats[True][2]
+    assert m_on.prefix is not None and m_on.prefix.hit_tokens > 0
+    assert 0.0 < m_on.prefix.hit_rate < 1.0
+    assert m_on.kv_used_series and m_on.kv_used_mean > 0.0
+    assert stats[False][2].prefix is None
+
+
+def test_engine_downgrades_unsupported_config(rules):
+    cfg = reduced(get_config("mamba2-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = _engine(cfg, params, rules)
+    assert eng.prefix is None
+    assert eng.prefix_disabled_reason
+
+
+def test_engine_evicts_under_pressure(setup, rules):
+    """Tiny pool + many distinct prompts: the cache must give blocks back
+    (eviction) so admission keeps making progress, and every request must
+    still finish."""
+    cfg, params = setup
+    eng = _engine(cfg, params, rules, kv_pool_tokens=256, max_batch=3,
+                  max_model_len=128)
+    reqs = shared_prefix_workload(4, 2, cfg.vocab_size, prefix_len=32,
+                                  suffix_len=16, max_new_tokens=4, seed=1)
+    m = eng.run(reqs)
+    assert all(r.t_done is not None for r in reqs)
+    assert eng.prefix.stats.blocks_evicted > 0
+    assert m.max_kv_fraction <= 1.0
+
+
+def test_cluster_prefix_affinity_and_aggregation(setup, rules):
+    """2-replica sync cluster with prefix caches + affinity routing: each
+    tenant stays home (after its first request), outputs match the
+    cache-off cluster, and ClusterMetrics aggregates the reuse."""
+    cfg, params = setup
+    outs = {}
+    for on in (False, True):
+        ecfg = EngineConfig(max_batch=4, block_size=16, kv_pool_tokens=8192,
+                            max_model_len=256, prefill_bucket=32,
+                            prefix_cache=on)
+        cluster = ReplicatedCluster.colocated(
+            Model(cfg, rules), params, ecfg, 2,
+            policy=PrefixAffinity(affinity_tokens=48), mode="sync")
+        reqs = shared_prefix_workload(2, 4, cfg.vocab_size, prefix_len=48,
+                                      suffix_len=16, max_new_tokens=5,
+                                      seed=3)
+        cm = cluster.run(reqs)
+        assert cm.completed == len(reqs)
+        outs[on] = [r.output_tokens for r in reqs]
+        if on:
+            assert cm.prefill_tokens_skipped > 0
+            assert 0.0 < cm.prefix_hit_rate < 1.0
+            assert cm.prefix_blocks_shared > 0
+            assert cm.peak_kv_fraction > 0.0
+            assert "prefix cache" in cm.summary()
+            # affinity: with 2 tenants on 2 replicas, each tenant's 4
+            # requests landed on one replica
+            by_rep = [sorted(r.req_id % 2 for r in rep.requests)
+                      for rep in cluster.replicas]
+            assert all(len(set(ids)) <= 1 for ids in by_rep if ids)
+    assert outs[True] == outs[False]
+
+
+# ---------------------------------------------------------------- router --
+class _Rep:
+    def __init__(self, load):
+        self.load = load
+
+
+def _req(prompt):
+    from repro.serving.workload import Request
+    return Request(req_id=0, prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=1)
+
+
+def test_prefix_affinity_sticky_and_skew():
+    pol = make_policy("prefix-affinity")
+    assert isinstance(pol, PrefixAffinity)
+    reps = [_Rep(0), _Rep(0)]
+    a, b = np.arange(64), np.arange(100, 164)
+    assert pol.choose(_req(a), reps) == 0          # new key -> least loaded
+    reps[0].load = 1
+    assert pol.choose(_req(b), reps) == 1          # different key
+    reps[1].load = 2
+    assert pol.choose(_req(a), reps) == 0          # sticky beats load...
+    reps[0].load = 100
+    assert pol.choose(_req(a), reps) == 1          # ...until skew bound
+    reps[0].load = 0
+    assert pol.choose(_req(a), reps) == 1          # re-homed, still sticky
+    pol.reset()
+    assert pol.choose(_req(a), reps) == 0          # forgotten
+
+
+def test_prefix_affinity_key_is_prefix_only():
+    pol = PrefixAffinity(affinity_tokens=8)
+    reps = [_Rep(0), _Rep(0)]
+    base = np.arange(32)
+    idx = pol.choose(_req(base), reps)
+    reps[1 - idx].load = 0
+    reps[idx].load = 1
+    # same first 8 tokens, different tail: same home
+    variant = np.concatenate([base[:8], np.arange(500, 524)])
+    assert pol.choose(_req(variant), reps) == idx
+
+
+# -------------------------------------------------------------- workload --
+def test_shared_prefix_workload_shape():
+    reqs = shared_prefix_workload(3, 4, 1000, prefix_len=20, suffix_len=5,
+                                  max_new_tokens=7, seed=0)
+    assert len(reqs) == 12
+    assert all(r.prompt_len == 25 for r in reqs)
+    assert all(r.max_new_tokens == 7 for r in reqs)
+    # interleaved: first 3 requests cover all 3 tenants
+    heads = [r.prompt[:20].tobytes() for r in reqs]
+    assert len(set(heads[:3])) == 3
+    assert len(set(heads)) == 3                  # 3 distinct prefixes
+    # every tenant's prefix identical across its requests
+    for t in range(3):
+        assert len({heads[i] for i in range(t, 12, 3)}) == 1
+    # suffixes unique
+    assert len({r.prompt[20:].tobytes() for r in reqs}) == 12
+    back = shared_prefix_workload(3, 4, 1000, prefix_len=20, suffix_len=5,
+                                  seed=0, interleave=False)
+    bheads = [r.prompt[:20].tobytes() for r in back]
+    assert len(set(bheads[:4])) == 1             # tenant-at-a-time
+    with pytest.raises(ValueError, match="tenant"):
+        shared_prefix_workload(0, 4, 100)
+    with pytest.raises(ValueError, match="prefix_len"):
+        shared_prefix_workload(1, 1, 100, prefix_len=0)
+
+
+def test_shared_prefix_workload_arrivals():
+    reqs = shared_prefix_workload(2, 4, 100, prefix_len=8, suffix_len=4,
+                                  seed=0, arrival_rate=10.0)
+    ts = [r.arrival_s for r in reqs]
+    assert all(t > 0 for t in ts) and ts == sorted(ts)
+
+
+# ------------------------------------------------------------- BCA hooks --
+def test_bca_effective_kv_footprint():
+    from repro.core import (H100_PAPER, BatchingConfigurationAdvisor,
+                            decode_curves, max_batch_for, with_prefix_reuse)
+    cfg = get_config("opt-1.3b")
+    base = decode_curves(cfg, H100_PAPER, ctx=331, max_batch=64)
+    scaled = with_prefix_reuse(base, 0.5)
+    np.testing.assert_allclose(scaled.kv_fraction, base.kv_fraction * 0.5)
+    np.testing.assert_allclose(scaled.throughput, base.throughput)
+    curves2 = decode_curves(cfg, H100_PAPER, ctx=331, max_batch=64,
+                            prefix_hit_rate=0.5)
+    np.testing.assert_allclose(curves2.kv_fraction, scaled.kv_fraction)
+    # the same HBM admits ~2x the requests at a 50% hit rate
+    mb0 = max_batch_for(cfg, H100_PAPER, ctx=331)
+    mb5 = max_batch_for(cfg, H100_PAPER, ctx=331, prefix_hit_rate=0.5)
+    assert mb5 >= int(1.9 * mb0)
+    slo = float(base.itl_s.max()) * 2
+    r0 = BatchingConfigurationAdvisor(base, slo_s=slo).solve()
+    r5 = BatchingConfigurationAdvisor(base, slo_s=slo,
+                                      prefix_hit_rate=0.5).solve()
+    assert r5.kv_fraction == pytest.approx(r0.kv_fraction * 0.5)
+    with pytest.raises(ValueError, match="hit_rate"):
+        with_prefix_reuse(base, 1.0)
