@@ -48,8 +48,9 @@ def _prefill_batch(engine, B, prompt_len, vocab, seed=0):
         prompt = rng.integers(0, vocab, size=prompt_len).astype(np.int32)
         req = Request(req_id=i, prompt=prompt, max_new_tokens=1 << 20)
         engine.pool.manager.allocate(i, prompt_len + 1)
-        engine._prefill(req)
-        engine.running.append(req)
+        # completion protocol appends to engine.running (max_new_tokens
+        # is effectively unbounded, so the request never finishes here)
+        engine._complete_prefill(req, engine._prefill(req), now=0.0)
         rids.append(i)
     return rids
 

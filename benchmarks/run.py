@@ -31,6 +31,10 @@ def main() -> int:
     ap.add_argument("--prefix", action="store_true",
                     help="also run the prefix-cache reuse benchmark "
                          "(shared-system-prompt workload, cache on vs off)")
+    ap.add_argument("--chunked", action="store_true",
+                    help="also run the chunked-prefill HOL-blocking "
+                         "benchmark (mixed long/short workload, chunked "
+                         "vs serial prefill)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import paper_claims as pc
@@ -92,6 +96,23 @@ def main() -> int:
 
         # reduced shape (the full acceptance run is the module's default)
         _run("prefix_reuse", lambda: run_pair(per_tenant=6), _pfx_derive)
+
+    if args.chunked:
+        from benchmarks.chunked_prefill import run_pair as chunked_pair
+
+        def _chk_derive(o):
+            for key in ("claim_itl_p95_2x", "claim_bit_identical",
+                        "claim_throughput_within_10pct"):
+                claim(o, key)
+            return (f"itl_p95_ratio={o['itl_p95_ratio']:.2f};"
+                    f"throughput_ratio={o['throughput_ratio']:.3f};"
+                    f"identical={o['tokens_identical']}")
+
+        # reduced shape (the full acceptance run is the module's default)
+        _run("chunked_prefill",
+             lambda: chunked_pair(n_short=8, n_long=4, long_len=512,
+                                  short_new=16, long_new=4,
+                                  chunk_tokens=128), _chk_derive)
 
     # §Roofline aggregation from the dry-run artifacts, if present
     from benchmarks.roofline_table import load_records, summary

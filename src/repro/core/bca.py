@@ -28,6 +28,10 @@ class BCAResult:
     kv_fraction_at_max: float
     slo_s: float
     eps: float
+    # per-step chunked-prefill token budget keeping mixed-step ITL under
+    # the SLO at B_opt (None when the advisor was not given a per-token
+    # prefill cost — serial admission prefill is then assumed)
+    chunk_tokens: Optional[int] = None
 
     @property
     def throughput_retained(self) -> float:
@@ -38,10 +42,39 @@ class BCAResult:
         return max(0.0, self.kv_fraction_at_max - self.kv_fraction)
 
     def summary(self) -> str:
-        return (f"B_opt={self.b_opt}  T={self.throughput:.1f} tok/s "
-                f"({self.throughput_retained*100:.1f}% of MAX)  "
-                f"ITL={self.itl_s*1e3:.2f} ms  KV={self.kv_fraction*100:.1f}% "
-                f"(MAX uses {self.kv_fraction_at_max*100:.1f}%)")
+        s = (f"B_opt={self.b_opt}  T={self.throughput:.1f} tok/s "
+             f"({self.throughput_retained*100:.1f}% of MAX)  "
+             f"ITL={self.itl_s*1e3:.2f} ms  KV={self.kv_fraction*100:.1f}% "
+             f"(MAX uses {self.kv_fraction_at_max*100:.1f}%)")
+        if self.chunk_tokens is not None:
+            s += f"  chunk={self.chunk_tokens} tok/step"
+        return s
+
+
+def chunk_budget_for(curves: ServingCurves, batch: int, slo_s: float,
+                     prefill_token_s: float, *, quantum: int = 16,
+                     max_tokens: int = 4096) -> int:
+    """Largest per-step chunked-prefill token budget (a multiple of
+    ``quantum``) that keeps the *mixed* step under the ITL SLO at
+    ``batch``:
+
+        L_mixed(B, C) ≈ L_decode(B) + C * t_prefill_token <= SLO
+
+    The knob BCA sweeps alongside ``max_batch``: a bigger budget finishes
+    prefills (TTFT) faster, a smaller one keeps decode ITL tighter — the
+    SLO headroom above the pure-decode step time is exactly the prefill
+    time the scheduler may spend per step. Floors at ``quantum`` (a zero
+    budget would starve prefill and stall admission forever).
+    """
+    if prefill_token_s <= 0:
+        raise ValueError(
+            f"prefill_token_s must be > 0, got {prefill_token_s}")
+    if quantum < 1:
+        raise ValueError(f"quantum must be >= 1, got {quantum}")
+    idx = int(np.argmin(np.abs(curves.batches - batch)))
+    headroom = slo_s - float(curves.itl_s[idx])
+    c = int(headroom / prefill_token_s) // quantum * quantum
+    return int(np.clip(c, quantum, max_tokens))
 
 
 def with_prefix_reuse(curves: ServingCurves,
@@ -65,13 +98,20 @@ def with_prefix_reuse(curves: ServingCurves,
 
 class BatchingConfigurationAdvisor:
     def __init__(self, curves: ServingCurves, *, slo_s: float,
-                 eps: float = 0.1, prefix_hit_rate: float = 0.0):
+                 eps: float = 0.1, prefix_hit_rate: float = 0.0,
+                 prefill_token_s: Optional[float] = None,
+                 chunk_quantum: int = 16):
         if prefix_hit_rate:
             curves = with_prefix_reuse(curves, prefix_hit_rate)
         self.curves = curves
         self.slo_s = slo_s
         self.eps = eps
         self.prefix_hit_rate = prefix_hit_rate
+        # per-prompt-token prefill cost (measured or modeled via
+        # core.perfmodel.prefill_step_terms): when given, solve() also
+        # sizes the chunked-prefill budget at B_opt
+        self.prefill_token_s = prefill_token_s
+        self.chunk_quantum = chunk_quantum
 
     def solve(self) -> BCAResult:
         c = self.curves
@@ -87,6 +127,11 @@ class BatchingConfigurationAdvisor:
             masked = np.where(feasible, c.throughput, -np.inf)
             idx = int(np.argmax(masked))
         imax = int(np.argmax(c.batches))
+        chunk = None
+        if self.prefill_token_s is not None:
+            chunk = chunk_budget_for(c, int(c.batches[idx]), self.slo_s,
+                                     self.prefill_token_s,
+                                     quantum=self.chunk_quantum)
         return BCAResult(
             b_opt=int(c.batches[idx]),
             throughput=float(c.throughput[idx]),
@@ -94,7 +139,7 @@ class BatchingConfigurationAdvisor:
             kv_fraction=float(c.kv_fraction[idx]),
             throughput_at_max=float(c.throughput[imax]),
             kv_fraction_at_max=float(c.kv_fraction[imax]),
-            slo_s=self.slo_s, eps=self.eps)
+            slo_s=self.slo_s, eps=self.eps, chunk_tokens=chunk)
 
 
 def slo_from_reference(curves: ServingCurves, ref_batch: int = 32,

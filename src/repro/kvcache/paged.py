@@ -112,6 +112,33 @@ class BlockManager:
         self.version += 1
         return got
 
+    def covered_tokens(self, req_id: int) -> int:
+        """Tokens the request's current table can hold (block-granular)."""
+        return len(self.tables.get(req_id, ())) * self.block_size
+
+    def can_extend(self, req_id: int, target_tokens: int) -> bool:
+        """Could the table grow to cover ``target_tokens`` without
+        draining the watermark reserve? (True when it already does.)"""
+        short = target_tokens - self.covered_tokens(req_id)
+        return short <= 0 or self.can_allocate(short)
+
+    def extend(self, req_id: int, target_tokens: int, *,
+               allow_reserve: bool = False) -> List[int]:
+        """Grow ``req_id``'s table to cover ``target_tokens`` total tokens.
+
+        The chunked-prefill allocation entry point: each prompt chunk
+        extends the table by exactly the blocks it is about to write, so a
+        long prompt streams into the pool across steps instead of
+        reserving its whole footprint at admission. Enforces the same
+        admission watermark as :meth:`allocate` (a chunk must never
+        over-allocate past the reserve); returns the new blocks (empty
+        when the table already covers the target).
+        """
+        short = target_tokens - self.covered_tokens(req_id)
+        if short <= 0:
+            return []
+        return self.allocate(req_id, short, allow_reserve=allow_reserve)
+
     def share(self, req_id: int, blocks: Sequence[int]):
         """Splice existing (cached) blocks into ``req_id``'s table.
 
@@ -204,6 +231,71 @@ def _is_kv_leaf(spec: ParamSpec) -> bool:
     return KV_SEQ in spec.logical
 
 
+def cache_layout(cfg: ArchConfig, block_size: int):
+    """(is_kv, bdim) pytrees describing a config's pool layout.
+
+    ``is_kv``: True for paged attention-K/V leaves (vs dense per-slot
+    state); ``bdim``: index of the block/slot axis (1 when the leaf is
+    layer-stacked). Shared by :class:`PagedKVCache` and the engine's
+    jitted fused chunk-prefill step (which re-implements gather/scatter
+    inside the jit and needs the same layout facts at trace time).
+    """
+    template = model_lib.abstract_cache(cfg, 1, block_size)
+    is_spec = lambda x: isinstance(x, ParamSpec)    # noqa: E731
+    is_kv = jax.tree.map(_is_kv_leaf, template, is_leaf=is_spec)
+    bdim = jax.tree.map(
+        lambda sp: 1 if sp.logical and sp.logical[0] == "layers" else 0,
+        template, is_leaf=is_spec)
+    return is_kv, bdim
+
+
+def gather_prefix_jit(pool, is_kv, bdim, tables, block_size: int):
+    """In-jit analogue of :meth:`PagedKVCache.gather_prefix`: materialize
+    dense ``[.., 1, P, K, hd]`` prefix K/V from the pool leaves through a
+    trash-padded ``[nb]`` block table (rows past the valid prefix length
+    are masked downstream via ``prefix_len``). Traced — runs fused inside
+    the chunk-prefill jit instead of as per-leaf eager dispatches."""
+    P = tables.shape[0] * block_size
+
+    def g(leaf, kv, bd):
+        if not kv:
+            raise NotImplementedError(
+                "prefix gather over non-KV (dense-state) leaves: chunked "
+                "prefill requires per-token state")
+        if bd == 1:                                # [L, NB, BS, K, hd]
+            v = leaf[:, tables]
+            return v.reshape(v.shape[0], 1, P, *v.shape[3:])
+        v = leaf[tables]
+        return v.reshape(1, P, *v.shape[2:])
+
+    return jax.tree.map(g, pool, is_kv, bdim)
+
+
+def scatter_chunk_jit(pool, cache_one, is_kv, bdim, tables, start, n_valid,
+                      block_size: int):
+    """In-jit analogue of the token-granular prefill write: scatter the
+    chunk cache's first ``n_valid`` rows (traced) to their physical
+    (block, slot) addresses starting at traced position ``start``;
+    padding rows are routed to the trash block. Returns the new pool."""
+    def s(leaf, view, kv, bd):
+        if not kv:
+            raise NotImplementedError(
+                "chunk scatter over non-KV (dense-state) leaves: chunked "
+                "prefill requires per-token state")
+        v = view[:, 0] if bd == 1 else view[0]     # [L, S, K, hd] / [S,..]
+        S = v.shape[1] if bd == 1 else v.shape[0]
+        trash = (leaf.shape[1] if bd == 1 else leaf.shape[0]) - 1
+        pos = start + jnp.arange(S)
+        idx = jnp.clip(pos // block_size, 0, tables.shape[0] - 1)
+        phys = jnp.where(jnp.arange(S) < n_valid, tables[idx], trash)
+        sib = pos % block_size
+        if bd == 1:
+            return leaf.at[:, phys, sib].set(v)
+        return leaf.at[phys, sib].set(v)
+
+    return jax.tree.map(s, pool, cache_one, is_kv, bdim)
+
+
 class PagedKVCache:
     """Physical paged pool mirroring a model cache pytree."""
 
@@ -220,14 +312,12 @@ class PagedKVCache:
         self._free_slots: List[int] = list(range(max_batch))
         self.trash_block = num_blocks          # physical block for padding
         self.trash_slot = max_batch            # dense slot for padding
-        # template with batch=1, kv_len=block_size gives per-leaf shapes
+        # template with batch=1, kv_len=block_size gives per-leaf shapes;
+        # is_kv / bdim (the layout facts) come from the shared helper so
+        # the jitted chunk-prefill step agrees with the pool byte-for-byte
         template = model_lib.abstract_cache(cfg, 1, block_size)
         is_spec = lambda x: isinstance(x, ParamSpec)
-        self._is_kv = jax.tree.map(_is_kv_leaf, template, is_leaf=is_spec)
-        # batch-dim index per leaf: 1 when the leaf is layer-stacked
-        self._bdim = jax.tree.map(
-            lambda sp: 1 if sp.logical and sp.logical[0] == "layers" else 0,
-            template, is_leaf=is_spec)
+        self._is_kv, self._bdim = cache_layout(cfg, block_size)
 
         def mk(spec: ParamSpec, is_kv: bool, bdim: int):
             shape = list(spec.shape)
@@ -348,17 +438,31 @@ class PagedKVCache:
 
         self.pool = jax.tree.map(cp, self.pool, self._is_kv, self._bdim)
 
-    def write_prefill(self, req_id: int, cache_one, start_pos: int = 0):
+    def write_prefill(self, req_id: int, cache_one, start_pos: int = 0,
+                      n_tokens: Optional[int] = None):
         """Store a single request's prefill cache (batch dim == 1).
 
         ``start_pos`` (block-aligned) writes the view starting at that
         token position — the suffix-only prefill path leaves the cached
         prefix blocks untouched and fills only the request's own blocks.
+
+        With ``n_tokens`` the write is *token-granular*: exactly the view's
+        first ``n_tokens`` rows are scattered to their physical
+        (block, slot) addresses starting at an arbitrary (not necessarily
+        block-aligned) ``start_pos`` — the chunked-prefill path, where a
+        chunk may end mid-block and the next chunk picks up inside the
+        same physical block. The write refuses to run past the allocated
+        table (a chunk must extend the table first, through the
+        watermark-checked :meth:`BlockManager.extend`).
         """
+        if n_tokens is not None:
+            return self._write_token_range(req_id, cache_one, start_pos,
+                                           n_tokens)
         if start_pos % self.block_size:
             raise ValueError(
                 f"start_pos ({start_pos}) must be block-aligned "
-                f"(block_size={self.block_size})")
+                f"(block_size={self.block_size}); pass n_tokens for the "
+                f"token-granular chunk path")
         blocks = self.manager.tables[req_id][start_pos // self.block_size:]
         nb = len(blocks)
         S_cap = nb * self.block_size
@@ -384,6 +488,37 @@ class PagedKVCache:
             if bdim == 1:
                 return pool.at[:, slot].set(view[:, 0])
             return pool.at[slot].set(view[0])
+
+        self.pool = jax.tree.map(w, self.pool, cache_one, self._is_kv,
+                                 self._bdim)
+
+    def _write_token_range(self, req_id: int, cache_one, start_pos: int,
+                           n_tokens: int):
+        """Scatter ``n_tokens`` prefill rows at positions
+        ``[start_pos, start_pos + n_tokens)`` — the chunk write."""
+        if n_tokens < 1:
+            raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+        table = self.manager.tables.get(req_id, [])
+        end = start_pos + n_tokens
+        if end > len(table) * self.block_size:
+            raise ValueError(
+                f"chunk write [{start_pos}, {end}) over-allocates past "
+                f"req {req_id}'s table ({len(table)} blocks x "
+                f"{self.block_size}); extend() the table first")
+        pos = np.arange(start_pos, end)
+        phys_j = jnp.asarray(np.asarray(table, np.int32)
+                             [pos // self.block_size])
+        sib_j = jnp.asarray((pos % self.block_size).astype(np.int32))
+
+        def w(pool, view, is_kv, bdim):
+            if not is_kv:
+                raise NotImplementedError(
+                    "token-granular prefill writes over non-KV "
+                    "(dense-state) leaves: chunked prefill requires "
+                    "per-token state (the engine gates on it)")
+            if bdim == 1:                       # view [L, 1, S_pad, K, hd]
+                return pool.at[:, phys_j, sib_j].set(view[:, 0, :n_tokens])
+            return pool.at[phys_j, sib_j].set(view[0, :n_tokens])
 
         self.pool = jax.tree.map(w, self.pool, cache_one, self._is_kv,
                                  self._bdim)

@@ -34,6 +34,10 @@ def main():
     ap.add_argument("--cluster-mode", default="thread",
                     choices=("thread", "sync"))
     ap.add_argument("--ctx", type=int, default=331)
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="N",
+                    help="chunked prefill token budget per mixed step "
+                         "(0 = serial admission-time prefill; -1 = size "
+                         "the budget from the BCA curves' ITL headroom)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share KV blocks across prompts with a common "
                          "prefix (radix prefix cache; skips redundant "
@@ -53,7 +57,8 @@ def main():
     from repro.configs import get_config, reduced
     from repro.core import (TPU_V5E, H100_PAPER, BatchingConfigurationAdvisor,
                             ReplicationPlanner, decode_curves, max_batch_for,
-                            replication_sweep, slo_from_reference)
+                            prefill_step_terms, replication_sweep,
+                            slo_from_reference)
     from repro.launch.mesh import make_test_mesh
     from repro.models.model import Model, init_params
     from repro.serving import (ContinuousBatchingEngine, EngineConfig,
@@ -64,14 +69,27 @@ def main():
     hw = H100_PAPER if args.arch.startswith(("opt-", "llama-2")) else TPU_V5E
 
     max_batch = args.max_batch
+    prefill_chunk = args.prefill_chunk if args.prefill_chunk > 0 else None
     if args.bca:
         mb = max_batch_for(full_cfg, hw, ctx=args.ctx)
         curves = decode_curves(full_cfg, hw, ctx=args.ctx, max_batch=mb)
         slo = slo_from_reference(curves, 32, args.slo_factor)
-        res = BatchingConfigurationAdvisor(curves, slo_s=slo,
-                                           eps=args.eps).solve()
+        # modeled per-prompt-token prefill cost: lets BCA sweep the
+        # chunked-prefill budget alongside max_batch (the ITL headroom
+        # above the pure-decode step is the prefill time a mixed step
+        # may spend)
+        pf_tok_s = prefill_step_terms(full_cfg, 1, args.ctx,
+                                      hw).step_s / args.ctx
+        res = BatchingConfigurationAdvisor(
+            curves, slo_s=slo, eps=args.eps,
+            prefill_token_s=pf_tok_s).solve()
         print(f"[BCA] {res.summary()}")
         max_batch = min(res.b_opt, 64) if args.reduced else res.b_opt
+        if args.prefill_chunk < 0:
+            prefill_chunk = res.chunk_tokens
+            print(f"[BCA] prefill chunk budget: {prefill_chunk} tok/step")
+    elif args.prefill_chunk < 0:
+        raise SystemExit("--prefill-chunk -1 (auto) requires --bca")
 
     n_rep = None
     if args.replicas == "auto":
@@ -97,7 +115,8 @@ def main():
         ecfg = EngineConfig(max_batch=min(max_batch, 64),
                             kv_pool_tokens=(budget // n_rep) // 64 * 64,
                             max_model_len=512, prefill_bucket=64,
-                            prefix_cache=args.prefix_cache)
+                            prefix_cache=args.prefix_cache,
+                            prefill_chunk_tokens=prefill_chunk)
         if args.shared_prefix_tenants > 0:
             from repro.serving import shared_prefix_workload
             # round per-tenant count up, then trim so exactly --requests
@@ -121,6 +140,8 @@ def main():
         engine = ContinuousBatchingEngine(model, params, ecfg)
         metrics = engine.run(reqs)
     print(f"[engine] {metrics.row()}")
+    print(f"[engine] {metrics.latency_row()}")
+    print(f"[engine] {metrics.stall_row()}")
 
 
 if __name__ == "__main__":

@@ -227,8 +227,17 @@ def self_attn_seq(p, x, cfg: ArchConfig, rules: ShardingRules, *,
     padding rows past it get kv id -1 and are masked out. ``lengths``
     stays the *total* valid KV length per request. The returned cache
     entry covers only the suffix (the prefix KV is already stored).
+    Both the prefix-cache suffix prefill and the engine's chunked prefill
+    (each prompt chunk attends over the chunks before it) ride this path;
+    ``prefix_len`` may land mid-block — validity is a row mask, not an
+    alignment requirement.
     """
     B, S, _ = x.shape
+    if prefix_k is not None and window is not None:
+        raise NotImplementedError(
+            "prefix/chunked prefill over a sliding-window ring cache: "
+            "the gathered prefix has no ring arithmetic (the engine "
+            "gates these configs to serial prefill)")
     q, k, v = qkv_project(p, x, cfg, rules, positions)
     k_all, v_all, q_off = k, v, 0
     kv_ids = jnp.arange(S)

@@ -505,14 +505,18 @@ def prefill(params, cfg: ArchConfig, rules: ShardingRules, batch: Dict,
     With padded prompts pass ``batch['lengths']`` ([B] valid lengths); the
     logits are then taken at each request's last valid position.
 
-    Suffix-only prefill (prefix cache): with ``prefix`` (a cache-shaped
-    pytree of dense prefix K/V gathered from the paged pool, e.g.
+    Suffix-only prefill (prefix cache) — and equally the engine's
+    *chunked* prefill: with ``prefix`` (a cache-shaped pytree of dense
+    prefix K/V gathered from the paged pool, e.g.
     :meth:`repro.kvcache.paged.PagedKVCache.gather_prefix`) and
     ``prefix_len`` (valid prefix tokens, traced), ``batch['tokens']``
     holds only the *suffix*: token positions are offset by ``prefix_len``
     and attention runs over [prefix || suffix]. ``batch['lengths']`` stays
     suffix-local (required in this mode). The returned cache covers only
-    the suffix.
+    the suffix. A prompt chunk is exactly this call with ``prefix_len`` =
+    tokens already written to the pool — ``prefix_len`` need not be
+    block-aligned (the gather masks the partial tail block), so chunks
+    may end mid-block.
     """
     some = batch.get("tokens", batch.get("embeds"))
     B, S = some.shape[0], some.shape[1]
@@ -520,6 +524,11 @@ def prefill(params, cfg: ArchConfig, rules: ShardingRules, batch: Dict,
     if prefix is not None:
         if lengths is None:
             raise ValueError("suffix prefill requires batch['lengths']")
+        if not cfg.causal:
+            raise NotImplementedError(
+                "prefix/chunked prefill requires causal attention: a "
+                "bidirectional suffix would retroactively change the "
+                "already-written prefix KV")
         pl = jnp.asarray(prefix_len, jnp.int32)
         positions = pl + jnp.arange(S)
         attn_lengths = lengths + pl       # mask sees total valid KV length

@@ -1,6 +1,7 @@
 from repro.serving.engine import (ContinuousBatchingEngine, EngineConfig,  # noqa
                                   StepFunctions)
 from repro.serving.workload import (Request, arrival_times,  # noqa
+                                    long_short_workload,
                                     shared_prefix_workload, sharegpt_like)
 from repro.serving.metrics import Percentiles, ServingMetrics  # noqa
 from repro.serving.cluster import (ClusterMetrics, ReplicatedCluster,  # noqa

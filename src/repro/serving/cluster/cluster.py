@@ -31,7 +31,9 @@ Two stepping modes:
   idle time. For offline (simultaneous-arrival) workloads this is fully
   deterministic: routing order is fixed and, with greedy decode, a
   1-replica sync cluster is token-for-token identical to the bare engine
-  — the equivalence test anchoring the whole subsystem. (With *timed*
+  — the equivalence test anchoring the whole subsystem. Chunked prefill
+  (``EngineConfig.prefill_chunk_tokens``) keeps this property: chunk
+  selection is pure FCFS over request state, never the wall clock. (With *timed*
   arrivals, dispatch rounds still follow the wall clock, so a load-aware
   policy's choices can vary with real step durations.)
 
@@ -74,7 +76,9 @@ class Replica:
 
     @property
     def in_flight(self) -> int:
-        return len(self.engine.running)
+        # a half-prefilled (chunked) request holds a batch seat and pool
+        # blocks just like a decoding one — load policies must see it
+        return len(self.engine.running) + len(self.engine.prefilling)
 
     @property
     def load(self) -> int:
@@ -196,14 +200,12 @@ class ReplicatedCluster:
         every request is pending from t=0 (offline workloads); timed
         arrivals are dispatched against the wall clock."""
         now = 0.0
-        while pending or any(r.engine.waiting or r.engine.running
-                             for r in self.replicas):
-            if pending and not any(r.engine.waiting or r.engine.running
-                                   for r in self.replicas):
+        while pending or any(r.engine.busy for r in self.replicas):
+            if pending and not any(r.engine.busy for r in self.replicas):
                 now = max(now, pending[0].arrival_s)
             self._dispatch(pending, now)
             for rep in self.replicas:
-                if rep.engine.waiting or rep.engine.running:
+                if rep.engine.busy:
                     rep.engine.step(now)
             self._sample_queues()
             now = max(now, clock())     # monotonic across idle jumps
@@ -243,8 +245,7 @@ class ReplicatedCluster:
                 while True:
                     busy = rep.engine.step(clock())
                     if not busy:
-                        if self._feeding_done and not rep.engine.waiting \
-                                and not rep.engine.running:
+                        if self._feeding_done and not rep.engine.busy:
                             return
                         time.sleep(0.001)
         except BaseException as e:          # surface replica crashes
@@ -259,7 +260,10 @@ class ReplicatedCluster:
             m = collect(rep.requests, wall, eng.itl_samples,
                         eng.max_kv_fraction, eng.batch_samples,
                         kv_samples=eng.kv_fraction_samples,
-                        prefix=eng.prefix.stats if eng.prefix else None)
+                        prefix=eng.prefix.stats if eng.prefix else None,
+                        stall_samples=eng.stall_samples,
+                        prefill_token_samples=eng.prefill_token_samples,
+                        decode_token_samples=eng.decode_token_samples)
             busy = sum(eng.itl_samples) / max(wall, 1e-9)
             qmax = max((q[rep.idx] for q in self.queue_samples), default=0)
             per_replica.append(ReplicaStats(

@@ -6,6 +6,32 @@ and free KV blocks (paged pool watermark) — then executes one batched
 decode step for every running request at its own position. Prefill runs
 per admitted request in padded length buckets (jit-cache friendly).
 
+Two prefill scheduling modes:
+
+* **chunked** (``EngineConfig.prefill_chunk_tokens`` set, Sarathi-style):
+  admission only *reserves a seat* — the request enters a ``PREFILLING``
+  phase and every engine step assembles one mixed batch: all running
+  decodes plus up to ``prefill_chunk_tokens`` of prompt chunks taken FCFS
+  from partially-prefilled requests. A chunk attends over the request's
+  already-written pool KV through the gathered-prefix path and scatters
+  its own KV rows (token-granular, so chunks may end mid-block), and its
+  blocks are allocated chunk-by-chunk under the admission watermark — a
+  long prompt *streams* into the pool across steps instead of blocking
+  the world. Chunk widths are bucketed (``prefill_bucket``) and prefix
+  pads are power-of-two, so the jit cache stays bounded. Greedy outputs
+  are bit-identical to serial prefill.
+* **serial** (default, ``prefill_chunk_tokens=None``): the legacy
+  admission-time prefill — the whole prompt runs at batch 1 inside
+  ``_admit``. A single long prompt stalls every running request's decode
+  for the full prefill duration (head-of-line blocking); the engine step
+  timer covers admission + prefill, so the stall is *visible* in ITL and
+  in the ``stall`` time series either way.
+
+Chunked prefill requires per-token-addressable KV (the same gate as the
+prefix cache); unsupported configs (SSM/cross-attn/MoE/window/embedding
+inputs) silently fall back to serial with the reason recorded in
+``chunking_disabled_reason``.
+
 Decode data path (the paper's memory-bound hot loop) has two modes:
 
 * ``paged`` (default) — **zero-copy**: one jitted step consumes a
@@ -52,7 +78,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.kvcache.paged import PagedKVCache
+from repro.kvcache.paged import (PagedKVCache, cache_layout,
+                                 gather_prefix_jit, scatter_chunk_jit)
 from repro.kvcache.prefix import PrefixIndex, PrefixStats, \
     prefix_cache_supported
 from repro.kvcache.view import PagedCacheView
@@ -79,6 +106,11 @@ class EngineConfig:
     # cap on cached blocks held by the index (None = bounded only by
     # LRU eviction under the pool watermark)
     prefix_cache_blocks: Optional[int] = None
+    # chunked prefill (Sarathi-style mixed steps): per-step token budget
+    # for prompt chunks scheduled alongside the running decode batch.
+    # None = serial admission-time prefill (the HOL-blocking legacy mode,
+    # kept as the baseline for benchmarks/chunked_prefill.py).
+    prefill_chunk_tokens: Optional[int] = None
 
     def __post_init__(self):
         """Fail loudly at construction instead of as a downstream shape
@@ -115,6 +147,11 @@ class EngineConfig:
             raise ValueError(
                 f"prefix_cache_blocks must be >= 1 (or None for "
                 f"unbounded), got {self.prefix_cache_blocks}")
+        if self.prefill_chunk_tokens is not None \
+                and self.prefill_chunk_tokens < 1:
+            raise ValueError(
+                f"prefill_chunk_tokens must be >= 1 (or None for serial "
+                f"admission-time prefill), got {self.prefill_chunk_tokens}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,13 +171,17 @@ class StepFunctions:
     decode: Callable
     paged: Callable
     prefix_prefill: Callable
+    chunk_prefill: Callable
 
     @classmethod
     def build(cls, model: Model, block_size: int) -> "StepFunctions":
-        # zero-copy step: the pool pytree (arg 1) is donated so the K/V
-        # row scatters alias the input buffers; CPU has no buffer
-        # donation, so skip it there to avoid per-compile warnings
-        donate = () if jax.default_backend() == "cpu" else (1,)
+        # zero-copy steps: the pool pytree (arg 1) is donated so the K/V
+        # row scatters alias the input buffers. Donation works on CPU
+        # since jaxlib 0.4.x (the repo's pinned floor) — in-place pool
+        # updates there too, instead of a full pool copy per step (a
+        # ~10x step-time cliff at large pools)
+        donate = (1,)
+        layout = cache_layout(model.cfg, block_size)
         return cls(
             model=model, block_size=block_size,
             prefill=jax.jit(partial(_prefill_fn, model),
@@ -149,7 +190,11 @@ class StepFunctions:
             paged=jax.jit(partial(_paged_decode_fn, model, block_size),
                           donate_argnums=donate),
             prefix_prefill=jax.jit(partial(_prefix_prefill_fn, model),
-                                   static_argnames=("cache_len",)))
+                                   static_argnames=("cache_len",)),
+            chunk_prefill=jax.jit(
+                partial(_chunk_prefill_fn, model, block_size, layout),
+                static_argnames=("cache_len", "nb_prefix"),
+                donate_argnums=donate))
 
 
 def _bucket(n: int, b: int) -> int:
@@ -179,8 +224,23 @@ class ContinuousBatchingEngine:
                             else ecfg.decode_mode)
         self.waiting: deque = deque()
         self.running: List[Request] = []
+        # PREFILLING phase (chunked mode): admitted requests whose prompt
+        # is still streaming into the pool, FCFS; _prefilled tracks how
+        # many prompt tokens are already written
+        self.prefilling: List[Request] = []
+        self._prefilled: Dict[int, int] = {}
         self._tokens: Dict[int, int] = {}        # rid -> next input token
         self._pos: Dict[int, int] = {}           # rid -> write position
+        # chunked prefill needs the same per-token-addressable KV as the
+        # prefix cache (a chunk attends over gathered pool blocks)
+        self.chunking = False
+        self.chunking_disabled_reason: Optional[str] = None
+        if ecfg.prefill_chunk_tokens is not None:
+            ok, why = prefix_cache_supported(self.cfg)
+            if ok:
+                self.chunking = True
+            else:
+                self.chunking_disabled_reason = why
         # jitted entry points: private by default, shareable across
         # co-located replicas (must agree on model and block_size — the
         # paged step bakes both in, so a mismatch would silently compute
@@ -198,6 +258,7 @@ class ContinuousBatchingEngine:
         self._decode_jit = self._steps.decode
         self._paged_jit = self._steps.paged
         self._prefix_prefill_jit = self._steps.prefix_prefill
+        self._chunk_prefill_jit = self._steps.chunk_prefill
         # radix prefix cache (opt-in, and only for configs whose KV is
         # per-token addressable — SSM/cross/MoE/window configs downgrade)
         self.prefix: Optional[PrefixIndex] = None
@@ -220,9 +281,30 @@ class ContinuousBatchingEngine:
         self.max_kv_fraction = 0.0
         self.preemptions = 0
         self.prefill_tokens_computed = 0
+        # scheduler-stall series: per-step seconds spent on admission +
+        # prefill before the decode launch, and the per-step prefill /
+        # decode token split — the observables that make HOL blocking
+        # (and the chunked fix) measurable
+        self.stall_samples: List[float] = []
+        self.prefill_token_samples: List[int] = []
+        self.decode_token_samples: List[int] = []
 
     # ------------------------------------------------------------- admin --
+    @property
+    def busy(self) -> bool:
+        """Any request still queued, prefilling, or decoding?"""
+        return bool(self.waiting or self.prefilling or self.running)
+
     def add_request(self, req: Request):
+        if req.prompt_len + 1 > self.ecfg.max_model_len:
+            # previously admitted silently: the decode limit went
+            # non-positive and the request "finished" with garbage
+            # truncation semantics after one step
+            raise ValueError(
+                f"request {req.req_id}: prompt_len ({req.prompt_len}) + 1 "
+                f"first output token exceeds max_model_len "
+                f"({self.ecfg.max_model_len}); reject or truncate the "
+                f"prompt upstream")
         self.waiting.append(req)
 
     def reset_stats(self):
@@ -236,6 +318,9 @@ class ContinuousBatchingEngine:
         self.max_kv_fraction = 0.0
         self.preemptions = 0
         self.prefill_tokens_computed = 0
+        self.stall_samples = []
+        self.prefill_token_samples = []
+        self.decode_token_samples = []
         self.pool.manager.total_allocations = 0
         self.pool.manager.cow_copies = 0
         if self.prefix is not None:
@@ -244,9 +329,46 @@ class ContinuousBatchingEngine:
     def _now(self, fallback: float) -> float:
         return self.clock() if self.clock is not None else fallback
 
+    def _limit(self, req: Request) -> int:
+        """Output-token budget: the request's own cap, clipped by model
+        length. At least 1 — prefill unconditionally emits the first
+        output token (add_request rejects prompts it couldn't hold)."""
+        return max(1, min(req.max_new_tokens,
+                          self.ecfg.max_model_len - req.prompt_len - 1))
+
+    def _finish(self, req: Request, t_done: float):
+        # capture peak occupancy before the release drops it — a request
+        # can finish straight out of prefill (max_new_tokens=1) without
+        # ever reaching the decode-step sampling point
+        self.max_kv_fraction = max(self.max_kv_fraction,
+                                   self.pool.manager.used_fraction)
+        req.t_done = t_done
+        self.pool.release(req.req_id)
+        self._tokens.pop(req.req_id, None)
+        self._pos.pop(req.req_id, None)
+
+    def _post_prefill(self, req: Request, now: float):
+        """Prefill just completed (first output token exists): stamp TTFT
+        and either finish the request outright — a ``max_new_tokens=1``
+        request is already satisfied and must not enter ``running`` (it
+        used to decode one extra token because the finish check only ran
+        after a decode step) — or move it to the decode batch.
+
+        ``now`` can be ahead of the wall clock when the caller
+        fast-forwards idle time to the next arrival; take the max so TTFT
+        stays on the same (possibly simulated) timeline as
+        arrival_s/t_done and never goes negative."""
+        req.t_first_token = max(now, self._now(now))
+        if req.generated >= self._limit(req):
+            self._finish(req, req.t_first_token)
+        else:
+            self.running.append(req)
+
     def _admit(self, now: float):
         mgr = self.pool.manager
-        while (self.waiting and len(self.running) < self.ecfg.max_batch
+        while (self.waiting
+               and len(self.running) + len(self.prefilling)
+               < self.ecfg.max_batch
                and self.waiting[0].arrival_s <= now):
             req = self.waiting[0]
             # the prefix cache turns part of the prompt into shared blocks:
@@ -261,7 +383,15 @@ class ContinuousBatchingEngine:
                 for b in hit:
                     mgr.incref(b)
             n_cached = len(hit) * self.ecfg.block_size
-            need_new = mgr.blocks_needed(req.prompt_len + 1) - len(hit)
+            if self.chunking:
+                # chunked admission reserves only the first chunk's
+                # blocks — the rest of the prompt streams in chunk by
+                # chunk through _prefill_step's watermark-checked extends
+                first = min(self.ecfg.prefill_chunk_tokens,
+                            req.prompt_len + 1 - n_cached)
+                need_new = mgr.blocks_needed(n_cached + first) - len(hit)
+            else:
+                need_new = mgr.blocks_needed(req.prompt_len + 1) - len(hit)
             short = need_new + mgr.watermark_blocks - mgr.free_blocks
             # only flush warm cache entries when eviction can plausibly
             # close the whole gap (cached_blocks is an upper bound on the
@@ -273,26 +403,70 @@ class ContinuousBatchingEngine:
             if mgr.free_blocks - need_new < mgr.watermark_blocks:
                 for b in hit:               # unpin (cache ref remains)
                     mgr.decref(b)
+                if not self.running and not self.prefilling:
+                    # nothing in flight will ever free a block: flushing
+                    # the whole cache is the only way forward; if even
+                    # that cannot fit the head request, fail loudly
+                    # instead of spinning forever
+                    evictable = (self.prefix.cached_blocks
+                                 if self.prefix is not None else 0)
+                    if (mgr.free_blocks + evictable - need_new
+                            < mgr.watermark_blocks):
+                        raise RuntimeError(
+                            f"KV pool exhausted: request {req.req_id} "
+                            f"(prompt_len={req.prompt_len}) needs "
+                            f"{need_new} blocks but the idle pool has "
+                            f"{mgr.free_blocks} free ({mgr.num_blocks} "
+                            f"total, {mgr.watermark_blocks} reserved) — "
+                            f"raise kv_pool_tokens or lower max_model_len")
+                    self.prefix.evict(need_new + mgr.watermark_blocks
+                                      - mgr.free_blocks)
+                    continue                # retry the same head request
                 break
             self.waiting.popleft()
             if hit:
                 mgr.share(req.req_id, hit)
                 for b in hit:               # table ref replaces the pin
                     mgr.decref(b)
-            mgr.allocate(req.req_id, req.prompt_len + 1 - n_cached)
             if self.prefix is not None:
                 self.prefix.record_admit(req.prompt_len, n_cached)
-            self._prefill(req, n_cached=n_cached)
-            # prefill emitted the first output token (int() inside it
-            # synced), so TTFT is stamped here, not at the first decode
-            # step. `now` can be ahead of the wall clock when the caller
-            # fast-forwards idle time to the next arrival; take the max so
-            # TTFT stays on the same (possibly simulated) timeline as
-            # arrival_s/t_done and never goes negative.
-            req.t_first_token = max(now, self._now(now))
-            self.running.append(req)
+            if self.chunking:
+                # actually take the blocks the capacity check above was
+                # sized for — admission must be a *reservation*, or a
+                # second admission in the same loop double-books the
+                # same free blocks and forces churny preemption of
+                # half-prefilled requests later
+                mgr.extend(req.req_id, n_cached + first)
+                self._prefilled[req.req_id] = n_cached
+                self.prefilling.append(req)
+                continue
+            mgr.allocate(req.req_id, req.prompt_len + 1 - n_cached)
+            # prefill emitted the first output token (int() inside
+            # _complete_prefill synced), so TTFT is stamped there, not
+            # at the first decode step
+            self._complete_prefill(req, self._prefill(req,
+                                                      n_cached=n_cached),
+                                   now)
+
+    def _complete_prefill(self, req: Request, logits, now: float):
+        """The one completion protocol both prefill modes share (the
+        bit-identity guarantee depends on it staying single-sourced):
+        first output token from the final logits, decode bookkeeping,
+        prefix-index registration, TTFT stamp, finish-or-run."""
+        rid = req.req_id
+        tok = int(jnp.argmax(logits[0]))
+        self._tokens[rid] = tok
+        self._pos[rid] = req.prompt_len
+        req.generated = 1       # prefill produced the first output token
+        req.output_tokens.append(tok)
+        if self.prefix is not None:
+            # register the prompt's full blocks (prefix + own) for reuse
+            self.prefix.insert(req.prompt, self.pool.manager.tables[rid])
+        self._post_prefill(req, now)
 
     def _prefill(self, req: Request, n_cached: int = 0):
+        """Serial whole-prompt prefill: compute + write the KV; returns
+        the last-position logits for :meth:`_complete_prefill`."""
         rid = req.req_id
         if n_cached:
             # suffix-only prefill: gather the cached prefix K/V once and
@@ -326,19 +500,121 @@ class ContinuousBatchingEngine:
                                                  cache_len=S)
             self.pool.write_prefill(rid, cache)
         self.prefill_tokens_computed += req.prompt_len - n_cached
-        if self.prefix is not None:
-            # register the prompt's full blocks (prefix + own) for reuse
-            self.prefix.insert(req.prompt, self.pool.manager.tables[rid])
-        tok = int(jnp.argmax(logits[0]))
-        self._tokens[rid] = tok
-        self._pos[rid] = req.prompt_len
-        req.generated = 1       # prefill produced the first output token
-        req.output_tokens.append(tok)
+        return logits
+
+    # ------------------------------------------------- chunked prefill --
+    def _prefill_step(self, now: float) -> int:
+        """Run up to ``prefill_chunk_tokens`` prompt tokens of chunked
+        prefill, FCFS across PREFILLING requests (leftover budget flows
+        to the next request in line). Returns prompt tokens computed.
+
+        This is the prefill half of the mixed step: together with the
+        decode batch the caller launches right after, one engine
+        iteration serves {every running decode} ∪ {<= budget prompt
+        tokens}, so a long prompt can never freeze the decode loop for
+        longer than one chunk.
+        """
+        if not self.chunking or not self.prefilling:
+            return 0
+        budget = self.ecfg.prefill_chunk_tokens
+        spent = 0
+        while budget > 0 and self.prefilling:
+            req = self.prefilling[0]
+            rid = req.req_id
+            done = self._prefilled[rid]
+            remaining = req.prompt_len - done
+            chunk = min(budget, remaining)
+            final = chunk == remaining
+            # final chunk also covers the first decode token's slot, the
+            # same +1 the serial path allocates at admission
+            target = done + chunk + (1 if final else 0)
+            if not self._reserve_for_chunk(rid, target):
+                break                    # strict FCFS: wait for blocks
+            logits = self._run_chunk(req, done, chunk)
+            self._prefilled[rid] = done + chunk
+            spent += chunk
+            budget -= chunk
+            if final:
+                self.prefilling.pop(0)
+                self._prefilled.pop(rid, None)
+                self._complete_prefill(req, logits, now)
+        return spent
+
+    def _reserve_for_chunk(self, rid: int, target_tokens: int) -> bool:
+        """Extend ``rid``'s block table to cover ``target_tokens``,
+        respecting the admission watermark. Under pressure: reclaim
+        cache-only prefix blocks first; if nothing is decoding (so no
+        block will free itself), preempt the youngest *other* prefilling
+        request; a lone request that cannot fit fails loudly."""
+        mgr = self.pool.manager
+        while True:
+            short = target_tokens - mgr.covered_tokens(rid)
+            if short <= 0:
+                return True
+            need = mgr.blocks_needed(short)
+            gap = need + mgr.watermark_blocks - mgr.free_blocks
+            if self.prefix is not None \
+                    and 0 < gap <= self.prefix.cached_blocks:
+                self.prefix.evict(gap)
+            if mgr.can_allocate(short):
+                mgr.extend(rid, target_tokens)
+                return True
+            if self.running:
+                return False             # decode completions free blocks
+            victims = [r for r in self.prefilling if r.req_id != rid]
+            if not victims:
+                raise RuntimeError(
+                    "KV pool exhausted: a single request's prompt exceeds "
+                    "pool capacity (raise kv_pool_tokens or lower "
+                    "max_model_len)")
+            self._preempt(victims[-1])
+
+    def _run_chunk(self, req: Request, done: int, chunk: int):
+        """Prefill prompt positions ``[done, done + chunk)``: attend over
+        the already-written pool KV and scatter the chunk's own KV rows,
+        all inside one fused jit (``prefix_len`` and the chunk length are
+        traced, so chunk progress never recompiles). Returns the chunk's
+        last-position logits (only the final chunk's are consumed)."""
+        rid = req.req_id
+        S = _bucket(chunk, self.ecfg.prefill_bucket)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :chunk] = req.prompt[done:done + chunk]
+        batch = {"tokens": jnp.asarray(toks),
+                 "lengths": jnp.asarray([chunk], jnp.int32)}
+        if done == 0:
+            # first chunk of an uncached prompt: plain prefill (identical
+            # compute to the serial path when the chunk covers the whole
+            # prompt — the bit-identity anchor) + token-granular write
+            logits, cache, _ = self._prefill_jit(self.params, batch,
+                                                 cache_len=S)
+            self.pool.write_prefill(rid, cache, start_pos=0, n_tokens=chunk)
+        else:
+            blocks = self.pool.manager.tables[rid]
+            nb_pad = _pow2_bucket(len(blocks), lo=1)
+            table = np.full((nb_pad,), self.pool.trash_block, np.int32)
+            table[:len(blocks)] = blocks
+            nb_prefix = _pow2_bucket(-(-done // self.ecfg.block_size), lo=1)
+            logits, new_pool = self._chunk_prefill_jit(
+                self.params, self.pool.pool, jnp.asarray(table), batch,
+                jnp.int32(done), jnp.int32(chunk), cache_len=S,
+                nb_prefix=min(nb_prefix, nb_pad))
+            self.pool.commit(new_pool)
+        self.prefill_tokens_computed += chunk
+        return logits
 
     # -------------------------------------------------------- preemption --
     def _preempt(self, req: Request):
-        """Recompute-style preemption: release everything, requeue first."""
+        """Recompute-style preemption: release everything, requeue first.
+
+        Works for RUNNING and half-PREFILLED requests alike (the caller
+        removes it from ``running``; ``prefilling`` membership and chunk
+        progress are cleared here) — re-admission redoes the prefix match
+        and restreams the prompt, and greedy decode regenerates identical
+        tokens."""
         rid = req.req_id
+        if req in self.prefilling:
+            self.prefilling.remove(req)
+        self._prefilled.pop(rid, None)
         self.pool.release(rid)
         self._tokens.pop(rid, None)
         self._pos.pop(rid, None)
@@ -356,9 +632,10 @@ class ContinuousBatchingEngine:
         needing a copy-on-write fork of a shared tail block) with an
         empty free list would raise mid-step. Instead: first reclaim
         cache-only blocks from the prefix index (cold cached prefixes are
-        the cheapest memory in the pool), then preempt the *youngest*
-        running requests (their blocks free immediately) until the
-        survivors fit.
+        the cheapest memory in the pool), then preempt half-prefilled
+        requests youngest-first (no generated tokens lost, only partial
+        prompt KV), then the *youngest* running requests (their blocks
+        free immediately) until the survivors fit.
         """
         mgr = self.pool.manager
         while True:
@@ -373,6 +650,9 @@ class ContinuousBatchingEngine:
             if self.prefix is not None \
                     and self.prefix.evict(need - mgr.free_blocks):
                 continue
+            if self.prefilling:
+                self._preempt(self.prefilling[-1])
+                continue
             if len(self.running) <= 1:
                 raise RuntimeError(
                     "KV pool exhausted: a single request exceeds pool "
@@ -381,11 +661,33 @@ class ContinuousBatchingEngine:
 
     # -------------------------------------------------------------- step --
     def step(self, now: float) -> bool:
-        """One engine iteration. Returns False when fully idle."""
-        self._admit(now)
-        if not self.running:
-            return bool(self.waiting)
+        """One engine iteration: admission + prefill work (serial prefill
+        or budgeted chunks) + one batched decode. Returns False when
+        fully idle.
+
+        The step timer starts *before* admission, so prefill stalls are
+        visible in ITL (serially-prefilled long prompts used to stall
+        every running decode invisibly, because the timer started after
+        ``_admit``); the prefill share of each step is also recorded
+        separately in ``stall_samples``.
+        """
         t0 = time.perf_counter()
+        pf0 = self.prefill_tokens_computed
+        self._admit(now)
+        self._prefill_step(now)
+        n_prefill = self.prefill_tokens_computed - pf0
+        t_sched = time.perf_counter() - t0
+        if not self.running:
+            if n_prefill:          # prefill-only step: keep the series
+                self.stall_samples.append(t_sched)
+                self.prefill_token_samples.append(n_prefill)
+                self.decode_token_samples.append(0)
+                # KV streamed in without a decode step to sample it
+                self.kv_fraction_samples.append(
+                    self.pool.manager.used_fraction)
+                self.max_kv_fraction = max(self.max_kv_fraction,
+                                           self.pool.manager.used_fraction)
+            return self.busy
         self._ensure_step_capacity()
         reqs = self.running                    # preemption may have shrunk it
         rids = [r.req_id for r in reqs]
@@ -404,26 +706,25 @@ class ContinuousBatchingEngine:
             next_tokens = self._decode_gather(rids)
         dt = time.perf_counter() - t0
         self.itl_samples.append(dt)
+        self.stall_samples.append(t_sched)
+        self.prefill_token_samples.append(n_prefill)
+        self.decode_token_samples.append(len(reqs))
         self.batch_samples.append(len(reqs))
         self.kv_fraction_samples.append(self.pool.manager.used_fraction)
         self.max_kv_fraction = max(self.max_kv_fraction,
                                    self.pool.manager.used_fraction)
-        # bookkeeping
+        # bookkeeping (no TTFT re-stamp here: _post_prefill always stamps
+        # t_first_token when prefill emits the first token, and preempted
+        # requests get re-stamped on re-admission — a re-stamp on decode
+        # could only mis-stamp)
         still = []
         for i, r in enumerate(reqs):
-            if r.t_first_token is None:
-                r.t_first_token = now
             self._pos[r.req_id] += 1
             self._tokens[r.req_id] = int(next_tokens[i])
             r.generated += 1
             r.output_tokens.append(int(next_tokens[i]))
-            limit = min(r.max_new_tokens,
-                        self.ecfg.max_model_len - r.prompt_len - 1)
-            if r.generated >= limit:
-                r.t_done = now + dt
-                self.pool.release(r.req_id)
-                self._tokens.pop(r.req_id)
-                self._pos.pop(r.req_id)
+            if r.generated >= self._limit(r):
+                self._finish(r, now + dt)
             else:
                 still.append(r)
         self.running = still
@@ -466,8 +767,8 @@ class ContinuousBatchingEngine:
         t_start = time.perf_counter()
         self.clock = lambda: time.perf_counter() - t_start
         now = 0.0
-        while self.waiting or self.running:
-            if not self.running and self.waiting:
+        while self.busy:
+            if not self.running and not self.prefilling and self.waiting:
                 now = max(now, self.waiting[0].arrival_s)
             self.step(now)
             # keep `now` monotonic across fast-forward jumps so t_done
@@ -477,7 +778,10 @@ class ContinuousBatchingEngine:
         return collect(requests, wall, self.itl_samples,
                        self.max_kv_fraction, self.batch_samples,
                        kv_samples=self.kv_fraction_samples,
-                       prefix=self.prefix.stats if self.prefix else None)
+                       prefix=self.prefix.stats if self.prefix else None,
+                       stall_samples=self.stall_samples,
+                       prefill_token_samples=self.prefill_token_samples,
+                       decode_token_samples=self.decode_token_samples)
 
 
 def _prefill_fn(model: Model, params, batch, cache_len: int):
@@ -495,6 +799,32 @@ def _prefix_prefill_fn(model: Model, params, batch, prefix_kv, prefix_len,
 
 def _decode_fn(model: Model, params, view, tokens, pos):
     return model.decode_step(params, view, tokens, pos, lengths=pos + 1)
+
+
+def _chunk_prefill_fn(model: Model, block_size: int, layout, params, pool,
+                      tables, batch, prefix_len, n_valid, cache_len: int,
+                      nb_prefix: int):
+    """One fused chunked-prefill step (jitted; ``pool`` donated).
+
+    The prefill analogue of ``_paged_decode_fn``: gather the request's
+    already-written prefix K/V from the pool through its (trash-padded)
+    block table, run the suffix prefill over the chunk, and scatter the
+    chunk's ``n_valid`` KV rows back to their physical (block, slot)
+    addresses — one XLA program per (chunk-width bucket, table pad,
+    prefix pad) instead of eager per-leaf gathers and writes between two
+    jit calls. ``prefix_len``/``n_valid`` are traced, so chunk progress
+    never recompiles; ``nb_prefix`` (static) trims the gather to the
+    power-of-two block count actually covering the prefix.
+    """
+    is_kv, bdim = layout
+    prefix_kv = gather_prefix_jit(pool, is_kv, bdim, tables[:nb_prefix],
+                                  block_size)
+    logits, cache, _ = model.prefill(params, batch, cache_len=cache_len,
+                                     prefix=prefix_kv,
+                                     prefix_len=prefix_len)
+    new_pool = scatter_chunk_jit(pool, cache, is_kv, bdim, tables,
+                                 prefix_len, n_valid, block_size)
+    return logits, new_pool
 
 
 def _paged_decode_fn(model: Model, block_size: int, params, pool, tables,

@@ -57,6 +57,16 @@ class ServingMetrics:
     kv_used_series: List[float] = dataclasses.field(default_factory=list)
     # prefix-cache reuse counters (None when the cache was off)
     prefix: Optional[PrefixStats] = None
+    # scheduler-stall view: per-step seconds spent on admission + prefill
+    # before the decode launch (the head-of-line component of ITL — a
+    # serial long-prompt prefill shows up here as one huge sample, the
+    # chunked scheduler as many bounded ones), plus the per-step
+    # prefill/decode token split of the mixed batch
+    stall_s_mean: float = 0.0
+    stall: Percentiles = dataclasses.field(default_factory=Percentiles)
+    stall_series: List[float] = dataclasses.field(default_factory=list)
+    prefill_tokens_per_step: float = 0.0     # mean computed prompt tokens
+    decode_tokens_per_step: float = 0.0      # mean decoded tokens
 
     @property
     def throughput(self) -> float:
@@ -78,11 +88,20 @@ class ServingMetrics:
         return (f"TTFT {self.ttft.row()}  ITL {self.itl.row()}  "
                 f"E2E {self.e2e.row(scale=1.0, unit='s')}")
 
+    def stall_row(self) -> str:
+        return (f"stall {self.stall.row()}  "
+                f"pf/step={self.prefill_tokens_per_step:.1f} tok  "
+                f"dec/step={self.decode_tokens_per_step:.1f} tok")
+
 
 def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
             max_kv_fraction: float, batch_samples: List[int],
             kv_samples: Optional[Sequence[float]] = None,
-            prefix: Optional[PrefixStats] = None) -> ServingMetrics:
+            prefix: Optional[PrefixStats] = None,
+            stall_samples: Optional[Sequence[float]] = None,
+            prefill_token_samples: Optional[Sequence[int]] = None,
+            decode_token_samples: Optional[Sequence[int]] = None
+            ) -> ServingMetrics:
     done = [r for r in requests if r.t_done is not None]
     total_in = sum(r.prompt_len for r in done)
     total_out = sum(r.generated for r in done)
@@ -104,4 +123,12 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
         e2e=Percentiles.from_samples(e2e),
         kv_used_mean=float(np.mean(kv_samples)) if kv_samples else 0.0,
         kv_used_series=list(kv_samples) if kv_samples else [],
-        prefix=prefix)
+        prefix=prefix,
+        stall_s_mean=(float(np.mean(stall_samples))
+                      if stall_samples else 0.0),
+        stall=Percentiles.from_samples(stall_samples or []),
+        stall_series=list(stall_samples) if stall_samples else [],
+        prefill_tokens_per_step=(float(np.mean(prefill_token_samples))
+                                 if prefill_token_samples else 0.0),
+        decode_tokens_per_step=(float(np.mean(decode_token_samples))
+                                if decode_token_samples else 0.0))

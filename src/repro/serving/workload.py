@@ -128,6 +128,43 @@ def shared_prefix_workload(n_tenants: int, per_tenant: int, vocab: int, *,
     return reqs
 
 
+def long_short_workload(n_short: int, n_long: int, vocab: int, *,
+                        short_len: int = 24, long_len: int = 384,
+                        short_new: int = 24, long_new: int = 16,
+                        every: int = 4, seed: int = 0) -> List[Request]:
+    """Head-of-line-blocking stress shape: a stream of short chatty
+    prompts with a long prompt injected after every ``every`` short ones.
+
+    Under serial admission-time prefill each long prompt freezes every
+    running short request's decode for its full prefill; under chunked
+    prefill the long prompt streams in ``prefill_chunk_tokens``-sized
+    slices between decode steps. All requests arrive at t=0 (offline
+    order = list order, so the FCFS scheduler is deterministic), shorts
+    first so the decode loop is busy when the first long prompt hits.
+    """
+    if n_short < 1 or n_long < 0:
+        raise ValueError(f"need >= 1 short and >= 0 long requests, got "
+                         f"{n_short}/{n_long}")
+    if short_len < 1 or long_len < 1 or every < 1:
+        raise ValueError(f"short_len/long_len/every must be >= 1, got "
+                         f"{short_len}/{long_len}/{every}")
+    rng = np.random.default_rng(seed)
+    shapes: List[tuple] = []
+    longs_left, shorts_left = n_long, n_short
+    while shorts_left or longs_left:
+        take = min(every, shorts_left)
+        shapes.extend([(short_len, short_new)] * take)
+        shorts_left -= take
+        if longs_left:
+            shapes.append((long_len, long_new))
+            longs_left -= 1
+    reqs = []
+    for i, (lin, lout) in enumerate(shapes):
+        prompt = rng.integers(0, vocab, size=lin).astype(np.int32)
+        reqs.append(Request(req_id=i, prompt=prompt, max_new_tokens=lout))
+    return reqs
+
+
 def sharegpt_like(n: int, vocab: int, *, seed: int = 0,
                   mean_in: int = SHAREGPT_MEAN_IN,
                   mean_out: int = SHAREGPT_MEAN_OUT,
@@ -155,7 +192,11 @@ def sharegpt_like(n: int, vocab: int, *, seed: int = 0,
     t = 0.0
     for i in range(n):
         if fixed:
-            lin, lout = mean_in, mean_out
+            # clamp to the same bound as the lognormal draws below — an
+            # unclamped fixed length silently overran engine model-length
+            # limits the stochastic path already respects
+            lin = int(np.clip(mean_in, 1, max_len // 2))
+            lout = int(np.clip(mean_out, 1, max_len // 2))
         else:
             lin = int(np.clip(rng.lognormal(np.log(mean_in), sigma), 1,
                               max_len // 2))

@@ -1,0 +1,299 @@
+"""Chunked prefill (Sarathi-style mixed prefill+decode steps): greedy
+outputs must be bit-identical to serial admission-time prefill across
+chunk sizes (including chunk < block_size and chunk > prompt), survive
+preemption of half-prefilled requests, compose with the prefix cache,
+and fix the admission-path bugs that rode along (max_new_tokens=1
+double-emit, silent overlong-prompt admission, the dead TTFT re-stamp)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model, init_params
+from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                           StepFunctions, long_short_workload,
+                           shared_prefix_workload, sharegpt_like)
+from repro.serving.workload import Request
+
+
+@pytest.fixture(scope="module")
+def setup(rules):
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    # one shared compile cache for every engine in this module (block
+    # size must match the engines below)
+    steps = StepFunctions.build(model, 8)
+    return cfg, params, model, steps
+
+
+def _engine(model, params, steps, **kw):
+    ecfg = EngineConfig(**{**dict(max_batch=4, block_size=8,
+                                  kv_pool_tokens=4096, max_model_len=256,
+                                  prefill_bucket=16), **kw})
+    return ContinuousBatchingEngine(model, params, ecfg, steps=steps)
+
+
+def _mixed_reqs(cfg, seed=0):
+    """Prompts straddling every chunk-size regime: shorter than a block,
+    shorter than a chunk, several chunks long, non-block-aligned."""
+    rng = np.random.default_rng(seed)
+    lens = [5, 12, 40, 70, 23]
+    return [Request(req_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=n).astype(np.int32),
+                    max_new_tokens=6) for i, n in enumerate(lens)]
+
+
+# ------------------------------------------------------- bit identity --
+@pytest.mark.parametrize("chunk", [6, 8, 24, 1024])
+def test_chunked_outputs_bit_identical(setup, chunk):
+    """chunk=6 < block_size=8 (mid-block chunk boundaries), chunk=24
+    (several chunks per prompt), chunk=1024 > every prompt (whole-prompt
+    chunks): all must reproduce serial prefill token-for-token."""
+    cfg, params, model, steps = setup
+    outs = {}
+    for c in (None, chunk):
+        eng = _engine(model, params, steps, prefill_chunk_tokens=c)
+        assert eng.chunking == (c is not None)
+        reqs = _mixed_reqs(cfg)
+        eng.run(reqs)
+        assert all(r.t_done is not None for r in reqs)
+        outs[c] = [r.output_tokens for r in reqs]
+    assert outs[chunk] == outs[None]
+
+
+def test_chunked_mixed_steps_interleave(setup):
+    """While a long prompt streams in, short requests keep decoding: the
+    engine must record steps whose mixed batch carries both prefill and
+    decode tokens, and the stall series must exist in the metrics."""
+    cfg, params, model, steps = setup
+    eng = _engine(model, params, steps, prefill_chunk_tokens=16,
+                  max_model_len=512, kv_pool_tokens=8192)
+    reqs = long_short_workload(4, 2, cfg.vocab_size, short_len=10,
+                               long_len=120, short_new=20, long_new=4,
+                               every=2, seed=1)
+    m = eng.run(reqs)
+    assert all(r.t_done is not None for r in reqs)
+    mixed = [i for i, (p, d) in enumerate(zip(eng.prefill_token_samples,
+                                              eng.decode_token_samples))
+             if p > 0 and d > 0]
+    assert mixed, "no step carried prefill chunks and decodes together"
+    # chunk budget respected per step
+    assert max(eng.prefill_token_samples) <= 16
+    assert m.stall_series and m.stall_s_mean > 0.0
+    assert m.prefill_tokens_per_step > 0.0
+    assert m.decode_tokens_per_step > 0.0
+
+
+# -------------------------------------------------------- preemption --
+def test_chunked_preempts_half_prefilled(setup):
+    """Tiny pool: the long prompt's chunks exhaust free blocks while
+    decodes need append room — the scheduler must preempt the
+    half-prefilled request (releasing its partial KV), re-admit it
+    later, and still produce serial-identical outputs."""
+    cfg, params, model, steps = setup
+    kw = dict(kv_pool_tokens=256, max_batch=4, max_model_len=256)
+    outs = {}
+    for c in (None, 16):
+        rng = np.random.default_rng(1)
+        mk = lambda i, n, new: Request(
+            req_id=i, prompt=rng.integers(0, cfg.vocab_size,
+                                          size=n).astype(np.int32),
+            max_new_tokens=new)
+        reqs = [mk(0, 40, 40), mk(1, 40, 40), mk(2, 150, 4)]
+        eng = _engine(model, params, steps, prefill_chunk_tokens=c, **kw)
+        eng.run(reqs)
+        assert all(r.t_done is not None for r in reqs)
+        outs[c] = ([r.output_tokens for r in reqs], eng.preemptions)
+    assert outs[16][1] >= 1, "pool pressure never preempted the prefill"
+    assert outs[16][0] == outs[None][0]
+    # preempted request left no residue
+    eng = _engine(model, params, steps, prefill_chunk_tokens=16, **kw)
+    assert not eng.prefilling and not eng._prefilled
+
+
+def test_oversized_request_fails_loudly(setup):
+    """A request that can never fit the pool must raise, not spin the
+    run loop forever (serial) or stream chunks into a wall (chunked)."""
+    cfg, params, model, steps = setup
+    rng = np.random.default_rng(0)
+    for c in (None, 32):
+        eng = _engine(model, params, steps, kv_pool_tokens=128,
+                      max_model_len=128, prefill_chunk_tokens=c)
+        req = Request(req_id=0,
+                      prompt=rng.integers(0, cfg.vocab_size,
+                                          size=120).astype(np.int32),
+                      max_new_tokens=4)
+        with pytest.raises(RuntimeError, match="KV pool exhausted"):
+            eng.run([req])
+
+
+# ------------------------------------------------------ prefix cache --
+def test_chunked_with_prefix_cache(setup):
+    """Prefix-cache hits compose with chunking: the cached prefix is
+    spliced (skipping its prefill work) and the suffix streams in
+    chunks, with outputs identical to the serial cache-off engine."""
+    cfg, params, model, steps = setup
+    outs, stats = {}, {}
+    for tag, kw in (("serial", {}),
+                    ("chunked+pfx", dict(prefill_chunk_tokens=12,
+                                         prefix_cache=True))):
+        eng = _engine(model, params, steps, kv_pool_tokens=8192, **kw)
+        reqs = shared_prefix_workload(2, 4, cfg.vocab_size, prefix_len=32,
+                                      suffix_len=20, max_new_tokens=5,
+                                      seed=0)
+        eng.run(reqs)
+        assert all(r.t_done is not None for r in reqs)
+        outs[tag] = [r.output_tokens for r in reqs]
+        stats[tag] = eng
+    assert outs["chunked+pfx"] == outs["serial"]
+    eng = stats["chunked+pfx"]
+    assert eng.prefix is not None and eng.prefix.stats.hit_tokens > 0
+    assert (eng.prefill_tokens_computed
+            < stats["serial"].prefill_tokens_computed)
+
+
+def test_chunking_downgrades_unsupported_config(rules):
+    """SSM state is not per-token addressable: chunking silently falls
+    back to serial prefill with the reason recorded."""
+    cfg = reduced(get_config("mamba2-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(
+        Model(cfg, rules), params,
+        EngineConfig(max_batch=2, block_size=8, kv_pool_tokens=1024,
+                     max_model_len=128, prefill_bucket=16,
+                     prefill_chunk_tokens=16))
+    assert not eng.chunking
+    assert eng.chunking_disabled_reason
+    reqs = sharegpt_like(2, cfg.vocab_size, seed=0, mean_in=10, mean_out=4,
+                         max_len=48, sigma=0.3)
+    eng.run(reqs)
+    assert all(r.t_done is not None for r in reqs)
+
+
+# -------------------------------------------------- satellite bugfixes --
+@pytest.mark.parametrize("chunk", [None, 16])
+def test_max_new_tokens_one_emits_one_token(setup, chunk):
+    """Prefill emits the first output token; a max_new_tokens=1 request
+    is complete right there and must never enter the decode batch (it
+    used to emit 2 tokens)."""
+    cfg, params, model, steps = setup
+    eng = _engine(model, params, steps, prefill_chunk_tokens=chunk)
+    rng = np.random.default_rng(3)
+    reqs = [Request(req_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=12 + i).astype(np.int32),
+                    max_new_tokens=1) for i in range(2)]
+    eng.run(reqs)
+    for r in reqs:
+        assert len(r.output_tokens) == 1
+        assert r.generated == 1
+        assert r.t_done is not None and r.t_first_token is not None
+        assert r.t_done >= r.t_first_token >= r.arrival_s
+    # nothing leaked into the decode phase
+    assert not eng.running and not eng._tokens and not eng._pos
+
+
+def test_overlong_prompt_rejected(setup):
+    cfg, params, model, steps = setup
+    eng = _engine(model, params, steps, max_model_len=64)
+    req = Request(req_id=0, prompt=np.zeros(64, np.int32), max_new_tokens=2)
+    with pytest.raises(ValueError, match="max_model_len"):
+        eng.add_request(req)
+    # boundary: prompt_len + 1 == max_model_len is admissible and
+    # completes with exactly the one prefill token
+    ok = Request(req_id=1, prompt=np.zeros(63, np.int32), max_new_tokens=5)
+    eng.run([ok])
+    assert ok.t_done is not None and len(ok.output_tokens) == 1
+
+
+def test_sharegpt_fixed_clamps_to_max_len():
+    reqs = sharegpt_like(3, 100, fixed=True, mean_in=5000, mean_out=9000,
+                         max_len=256)
+    assert all(r.prompt_len == 128 for r in reqs)
+    assert all(r.max_new_tokens == 128 for r in reqs)
+
+
+def test_ttft_stamped_at_prefill_and_after_preemption(setup):
+    """TTFT regression for the removed decode-path re-stamp: every
+    completed request's TTFT is stamped when its prefill produced the
+    first token — including requests that were preempted (TTFT reset to
+    None) and re-admitted — and is never before arrival or after
+    t_done."""
+    cfg, params, model, steps = setup
+    rng = np.random.default_rng(5)
+    mk = lambda i, n, new: Request(
+        req_id=i, prompt=rng.integers(0, cfg.vocab_size,
+                                      size=n).astype(np.int32),
+        max_new_tokens=new)
+    # tiny pool + growing decodes forces preemption of the youngest:
+    # two requests decoding to 120 tokens need 30 blocks, the pool has 24
+    eng = _engine(model, params, steps, kv_pool_tokens=192, max_batch=3,
+                  max_model_len=128)
+    reqs = [mk(0, 30, 90), mk(1, 30, 90), mk(2, 30, 8)]
+    for r in reqs:
+        eng.add_request(r)
+    now, preempted_seen = 0.0, False
+    for step in range(400):
+        if not eng.busy:
+            break
+        eng.step(float(step))
+        for r in reqs:
+            if r in eng.waiting and r.generated == 0 and step > 0:
+                # a preempted request has its TTFT reset
+                assert r.t_first_token is None
+                preempted_seen = preempted_seen or eng.preemptions > 0
+    assert eng.preemptions >= 1 and preempted_seen
+    for r in reqs:
+        assert r.t_done is not None
+        assert r.t_first_token is not None
+        assert r.arrival_s <= r.t_first_token <= r.t_done
+
+
+def test_engine_config_validates_chunk():
+    with pytest.raises(ValueError, match="prefill_chunk_tokens"):
+        EngineConfig(prefill_chunk_tokens=0)
+
+
+# ------------------------------------------------------------ metrics --
+def test_serial_stall_visible_in_metrics(setup):
+    """The HOL stall must be measurable: a serial engine serving a long
+    prompt amid running decodes records the prefill inside the step
+    timer (stall series) instead of hiding it before the timer starts."""
+    cfg, params, model, steps = setup
+    eng = _engine(model, params, steps, max_model_len=512,
+                  kv_pool_tokens=8192)
+    reqs = long_short_workload(3, 1, cfg.vocab_size, short_len=8,
+                               long_len=200, short_new=12, long_new=2,
+                               every=3, seed=2)
+    m = eng.run(reqs)
+    assert m.stall_series and max(m.stall_series) > 0.0
+    # the long prefill step dominates the stall series
+    assert m.stall.p99 >= np.percentile(m.stall_series, 50)
+    assert m.prefill_tokens_per_step > 0.0
+
+
+# ---------------------------------------------------------- BCA hook --
+def test_bca_chunk_budget():
+    from repro.core import (H100_PAPER, BatchingConfigurationAdvisor,
+                            chunk_budget_for, decode_curves)
+    cfg = get_config("opt-1.3b")
+    curves = decode_curves(cfg, H100_PAPER, ctx=331, max_batch=64)
+    slo = float(curves.itl_s.max()) * 2
+    # more SLO headroom -> bigger chunk budget; floored at the quantum
+    c_tight = chunk_budget_for(curves, 64, float(curves.itl_s.max()),
+                               1e-3, quantum=16)
+    c_loose = chunk_budget_for(curves, 64, slo, 1e-6, quantum=16)
+    assert c_tight == 16            # no headroom -> floor
+    assert c_loose > c_tight
+    assert c_loose % 16 == 0
+    with pytest.raises(ValueError, match="prefill_token_s"):
+        chunk_budget_for(curves, 64, slo, 0.0)
+    # advisor integration: chunk_tokens appears (and in the summary)
+    res = BatchingConfigurationAdvisor(curves, slo_s=slo,
+                                       prefill_token_s=1e-6).solve()
+    assert res.chunk_tokens and res.chunk_tokens % 16 == 0
+    assert "chunk=" in res.summary()
+    res0 = BatchingConfigurationAdvisor(curves, slo_s=slo).solve()
+    assert res0.chunk_tokens is None
