@@ -113,9 +113,12 @@ def sweep(batches=(1, 4, 8, 16), prompt_len: int = 96,
                                       seed)
                 for rid in rids:
                     eng.pool.manager.append_token(rid, eng._pos[rid] + 1)
+                # the decode paths consume Request objects now (they
+                # carry the per-request SamplingParams the sampler
+                # stacks); the batch sits in engine.running
                 fn = (eng._decode_paged if mode == "paged"
                       else eng._decode_gather)
-                row[f"{mode}_us"] = _time_steps(fn, rids)
+                row[f"{mode}_us"] = _time_steps(fn, list(eng.running))
             row["speedup"] = row["gather_us"] / row["paged_us"]
             rows.append(row)
     out = {"rows": rows,

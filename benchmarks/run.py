@@ -35,6 +35,10 @@ def main() -> int:
                     help="also run the chunked-prefill HOL-blocking "
                          "benchmark (mixed long/short workload, chunked "
                          "vs serial prefill)")
+    ap.add_argument("--stream", action="store_true",
+                    help="also run the streaming-API smoke benchmark "
+                         "(sampled vs greedy throughput, abort-reclaim "
+                         "latency, stream==run token identity)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import paper_claims as pc
@@ -113,6 +117,21 @@ def main() -> int:
              lambda: chunked_pair(n_short=8, n_long=4, long_len=512,
                                   short_new=16, long_new=4,
                                   chunk_tokens=128), _chk_derive)
+
+    if args.stream:
+        from benchmarks.stream_api import run_suite
+
+        def _stream_derive(o):
+            for key in ("claim_sampled_within_2x",
+                        "claim_abort_reclaims_blocks",
+                        "claim_stream_equals_run"):
+                claim(o, key)
+            return (f"sampled_over_greedy="
+                    f"{o['throughput']['sampled_over_greedy']:.2f};"
+                    f"abort_us="
+                    f"{o['abort']['mid_decode']['abort_us']:.0f}")
+
+        _run("stream_api", lambda: run_suite(smoke=True), _stream_derive)
 
     # §Roofline aggregation from the dry-run artifacts, if present
     from benchmarks.roofline_table import load_records, summary

@@ -50,6 +50,21 @@ def main():
                          "independent ShareGPT-like prompts — the shape "
                          "where --prefix-cache and the prefix-affinity "
                          "policy actually pay off")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax, "
+                         "bit-identical to the pre-sampler engine)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus truncation (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base RNG seed; request i samples from stream "
+                         "seed+i (bit-reproducible across batch "
+                         "composition and replicas)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the online facade (submit/"
+                         "stream/drain) and print per-event token deltas "
+                         "for the first request instead of a batch run")
     args = ap.parse_args()
 
     import jax
@@ -62,7 +77,7 @@ def main():
     from repro.launch.mesh import make_test_mesh
     from repro.models.model import Model, init_params
     from repro.serving import (ContinuousBatchingEngine, EngineConfig,
-                               sharegpt_like)
+                               SamplingParams, ServingAPI, sharegpt_like)
     from repro.sharding import rules_for
 
     full_cfg = get_config(args.arch)
@@ -117,6 +132,9 @@ def main():
                             max_model_len=512, prefill_bucket=64,
                             prefix_cache=args.prefix_cache,
                             prefill_chunk_tokens=prefill_chunk)
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.seed)
         if args.shared_prefix_tenants > 0:
             from repro.serving import shared_prefix_workload
             # round per-tenant count up, then trim so exactly --requests
@@ -125,23 +143,43 @@ def main():
             reqs = shared_prefix_workload(
                 args.shared_prefix_tenants, per, cfg.vocab_size,
                 prefix_len=128, suffix_len=24, max_new_tokens=16,
-                seed=0)[:args.requests]
+                seed=0, sampling=sampling)[:args.requests]
         else:
             reqs = sharegpt_like(args.requests, cfg.vocab_size, seed=0,
-                                 mean_in=24, mean_out=32, max_len=256)
+                                 mean_in=24, mean_out=32, max_len=256,
+                                 sampling=sampling)
         if n_rep > 1:
             from repro.serving import ReplicatedCluster
-            cluster = ReplicatedCluster.colocated(
+            backend = ReplicatedCluster.colocated(
                 model, params, ecfg, n_rep, policy=args.policy,
                 mode=args.cluster_mode)
-            metrics = cluster.run(reqs)
+        else:
+            backend = ContinuousBatchingEngine(model, params, ecfg)
+        if args.stream:
+            # online path: submit everything through the facade, stream
+            # the first request's token deltas, drain the rest
+            if n_rep > 1 and args.cluster_mode == "thread":
+                print("[stream] note: streaming steps replicas "
+                      "cooperatively from the calling thread; "
+                      "--cluster-mode thread applies only to the batch "
+                      "run() path")
+            api = ServingAPI(backend)
+            handles = [api.submit(r) for r in reqs]
+            for ev in api.stream(handles[0]):
+                print(f"[stream] req {ev.req_id} +{len(ev.new_token_ids)} "
+                      f"tok {list(ev.new_token_ids)} "
+                      f"finished={ev.finished} reason={ev.finish_reason}")
+            api.drain()
+            metrics = api.metrics()
+        else:
+            metrics = backend.run(reqs)
+        if n_rep > 1:
             print(metrics.summary())
             return
-        engine = ContinuousBatchingEngine(model, params, ecfg)
-        metrics = engine.run(reqs)
     print(f"[engine] {metrics.row()}")
     print(f"[engine] {metrics.latency_row()}")
     print(f"[engine] {metrics.stall_row()}")
+    print(f"[engine] {metrics.finish_row()}")
 
 
 if __name__ == "__main__":

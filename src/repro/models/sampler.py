@@ -1,0 +1,125 @@
+"""Vectorized in-jit token sampler with counter-based per-request RNG.
+
+One function, :func:`sample_tokens`, replaces every hardcoded
+``jnp.argmax`` in the serving decode paths (prefill first token, gather
+decode, fused zero-copy paged decode). It consumes *stacked* per-request
+sampling parameters — ``[B]`` vectors of temperature / top-k / top-p /
+seed — so one compiled program serves any mix of greedy and sampled
+requests in the same batch, and the batch composition never recompiles.
+
+Reproducibility contract (the reason this module exists):
+
+* **Greedy is argmax.** Rows with ``temperature <= 0`` return
+  ``argmax(logits)`` computed exactly as the pre-sampler engine did —
+  bit-identical greedy outputs, pinned by the tier-1 identity tests.
+* **Sampling is counter-based.** The RNG key for the token at sequence
+  position ``p`` of a request is ``fold_in(PRNGKey(seed), p)`` — a pure
+  function of the request's own ``(seed, position)``. No global RNG
+  stream is split per step, so the drawn noise is independent of batch
+  composition, power-of-two bucketing, preemption/re-admission (the
+  recompute replays the same positions), chunked vs. serial prefill, and
+  which cluster replica served the request. Fixed seed in, bit-identical
+  tokens out.
+* **Row-local truncation.** Top-k and top-p masks are computed per row
+  from that row's logits only; a neighbour's distribution cannot leak in.
+
+Sampling itself is Gumbel-max over the truncated, temperature-scaled
+logits — equivalent to a categorical draw from the renormalized
+distribution, without materializing the normalization.
+
+The whole sampled branch sits behind a ``lax.cond`` on
+``any(temperature > 0)``: an all-greedy batch (the common serving
+default and every pre-redesign workload) pays one argmax, not two
+``[B, V]`` sorts.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array, seed: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    """Sample one token per row. All args after ``logits`` are ``[B]``.
+
+    ``positions[i]`` is the sequence position the sampled token will
+    occupy (== number of prompt+output tokens before it) — the RNG
+    counter. Returns ``[B]`` int32 token ids.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sampled = jax.lax.cond(
+        jnp.any(temperature > 0.0),
+        lambda: _sample(logits, temperature, top_k, top_p, seed, positions),
+        lambda: greedy)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def _sample(logits, temperature, top_k, top_p, seed, positions):
+    """Categorical draw per row (greedy rows produce garbage here and are
+    overwritten by the caller's ``where``)."""
+    V = logits.shape[-1]
+    x = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k: keep logits >= the k-th largest (ties all survive; k<=0 or
+    # k>=V disables). One descending sort serves both truncations.
+    desc = jnp.sort(x, axis=-1)[:, ::-1]
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V).astype(jnp.int32)
+    kth = jnp.take_along_axis(desc, (k - 1)[:, None], axis=-1)
+    x = jnp.where(x < kth, -jnp.inf, x)
+    # top-p (nucleus) over the k-truncated distribution: keep the
+    # smallest high-probability set whose mass reaches top_p (the
+    # boundary token included; equal-probability ties all survive).
+    probs = jax.nn.softmax(x, axis=-1)
+    psort = jnp.sort(probs, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(psort, axis=-1)
+    # compare against top_p * total mass, not top_p itself: float32
+    # cumsum can undershoot 1.0, and a top_p inside that gap would find
+    # no qualifying prefix (argmax over all-False -> 0) and silently
+    # truncate to the single argmax token; scaling by the actual total
+    # makes the last entry always qualify
+    cut = jnp.argmax(cum >= top_p[:, None] * cum[:, -1:], axis=-1)
+    thr = jnp.take_along_axis(psort, cut[:, None], axis=-1)
+    thr = jnp.where(top_p[:, None] >= 1.0, 0.0, thr)      # p >= 1 disables
+    x = jnp.where(probs < thr, -jnp.inf, x)
+    # Gumbel-max with the counter-based per-request key
+    keys = jax.vmap(
+        lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
+    )(seed.astype(jnp.uint32), positions.astype(jnp.int32))
+    g = jax.vmap(lambda key: jax.random.gumbel(key, (V,), jnp.float32))(keys)
+    return jnp.argmax(x + g, axis=-1).astype(jnp.int32)
+
+
+def stack_sampling(samplings: Sequence, pad_to: Optional[int] = None
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray]:
+    """Stack per-request :class:`SamplingParams` into the ``[B]`` vectors
+    :func:`sample_tokens` consumes (duck-typed — reads ``.temperature`` /
+    ``.top_k`` / ``.top_p`` / ``.seed``). Padding rows (``pad_to`` >
+    ``len(samplings)``, the engine's power-of-two batch buckets) are
+    greedy with seed 0; their outputs are sliced off by the caller."""
+    n = pad_to if pad_to is not None else len(samplings)
+    temp = np.zeros((n,), np.float32)
+    top_k = np.zeros((n,), np.int32)
+    top_p = np.ones((n,), np.float32)
+    seed = np.zeros((n,), np.uint32)
+    for i, sp in enumerate(samplings):
+        temp[i] = sp.temperature
+        top_k[i] = sp.top_k
+        top_p[i] = sp.top_p
+        seed[i] = np.uint32(sp.seed)
+    return temp, top_k, top_p, seed
+
+
+def positions_array(positions: Sequence[int],
+                    pad_to: Optional[int] = None) -> np.ndarray:
+    """RNG-counter vector (see ``positions`` in :func:`sample_tokens`)."""
+    n = pad_to if pad_to is not None else len(positions)
+    pos = np.zeros((n,), np.int32)
+    pos[:len(positions)] = np.asarray(list(positions), np.int32)
+    return pos
+
+
+__all__: List[str] = ["sample_tokens", "stack_sampling", "positions_array"]

@@ -1,8 +1,12 @@
 from repro.serving.engine import (ContinuousBatchingEngine, EngineConfig,  # noqa
                                   StepFunctions)
-from repro.serving.workload import (Request, arrival_times,  # noqa
-                                    long_short_workload,
+from repro.serving.workload import (FINISH_ABORT, FINISH_LENGTH,  # noqa
+                                    FINISH_REASONS, FINISH_STOP, Request,
+                                    RequestState, SamplingParams,
+                                    arrival_times, long_short_workload,
                                     shared_prefix_workload, sharegpt_like)
 from repro.serving.metrics import Percentiles, ServingMetrics  # noqa
 from repro.serving.cluster import (ClusterMetrics, ReplicatedCluster,  # noqa
                                    autoscale)
+from repro.serving.api import (GenerationOutput, RequestHandle,  # noqa
+                               ServingAPI)

@@ -166,31 +166,54 @@ class ReplicatedCluster:
     def _sample_queues(self):
         self.queue_samples.append([rep.queue_depth for rep in self.replicas])
 
+    def route_one(self, req: Request) -> Replica:
+        """Route a single request through the policy and hand it to its
+        replica — the one admission path both the batch ``run()`` loop
+        and the facade's ``submit()`` go through."""
+        rep = self.replicas[self.router.route(req, self.replicas)]
+        # enqueue before recording: add_request rejects over-length
+        # prompts loudly, and a rejected request must not linger in the
+        # replica's stats as a phantom routed-but-never-served entry
+        rep.engine.add_request(req)
+        rep.requests.append(req)
+        return rep
+
     def _dispatch(self, pending: deque, now: float):
         while pending and pending[0].arrival_s <= now:
-            req = pending.popleft()
-            rep = self.replicas[self.router.route(req, self.replicas)]
-            rep.requests.append(req)
-            rep.engine.add_request(req)
+            self.route_one(pending.popleft())
 
     # --------------------------------------------------------------- run --
     def run(self, requests: Sequence[Request]) -> ClusterMetrics:
+        """Batch-offline compatibility wrapper over the streaming facade
+        (:class:`repro.serving.api.ServingAPI`) — online callers should
+        submit/stream/abort through the facade instead."""
+        from repro.serving.api import ServingAPI
+        return ServingAPI(self).run(requests)
+
+    def _run_impl(self, requests: Sequence[Request]) -> ClusterMetrics:
         """Serve ``requests`` to completion and return aggregate metrics.
 
         Requests are routed at their arrival time (so queue-aware policies
         see live load, not the t=0 snapshot). Telemetry accumulates across
         runs like the engine's — call :meth:`reset_stats` after a warmup.
+        Every replica's wall clock is restored on exit so a later run (or
+        facade-driven stepping) never stamps against this run's epoch.
         """
         pending = deque(sorted(requests, key=lambda r: r.arrival_s))
         t0 = time.perf_counter()
         clock = lambda: time.perf_counter() - t0          # noqa: E731
+        prev_clocks = [rep.engine.clock for rep in self.replicas]
         for rep in self.replicas:
             rep.engine.clock = clock
-        if self.mode == "sync":
-            self._run_sync(pending, clock)
-        else:
-            self._run_threaded(pending, clock)
-        wall = clock()
+        try:
+            if self.mode == "sync":
+                self._run_sync(pending, clock)
+            else:
+                self._run_threaded(pending, clock)
+            wall = clock()
+        finally:
+            for rep, prev in zip(self.replicas, prev_clocks):
+                rep.engine.clock = prev
         return self._collect(requests, wall)
 
     def _run_sync(self, pending: deque, clock: Callable[[], float]):

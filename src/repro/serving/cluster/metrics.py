@@ -10,11 +10,12 @@ imbalance, while the aggregate view answers the paper's Table IV question
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 
 from repro.serving.metrics import Percentiles, ServingMetrics
+from repro.serving.workload import FINISH_REASONS
 
 
 @dataclasses.dataclass
@@ -60,6 +61,9 @@ class ClusterMetrics:
     prefix_hit_rate: float = 0.0
     prefill_tokens_skipped: int = 0
     prefix_blocks_shared: int = 0
+    # finish-reason breakdown summed across replicas ({"length": n,
+    # "stop": n, "abort": n})
+    finish_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def throughput(self) -> float:
@@ -101,6 +105,10 @@ class ClusterMetrics:
                 f"  prefix cache: hit_rate={self.prefix_hit_rate*100:.1f}% "
                 f"skipped={self.prefill_tokens_skipped} tok "
                 f"shared={self.prefix_blocks_shared} blk")
+        if self.finish_reasons:
+            lines.append("  finish: " + " ".join(
+                f"{k}={self.finish_reasons.get(k, 0)}"
+                for k in FINISH_REASONS))
         lines += [f"  {r.row()}" for r in self.per_replica]
         return "\n".join(lines)
 
@@ -118,6 +126,10 @@ def aggregate(per_replica: List[ReplicaStats], *, wall_s: float, policy: str,
     hit_toks = sum(p.hit_tokens for p in pfx)
     kv_means = [r.metrics.kv_used_mean for r in per_replica
                 if r.metrics.kv_used_series]
+    finish: Dict[str, int] = {}
+    for r in per_replica:
+        for k, v in r.metrics.finish_reasons.items():
+            finish[k] = finish.get(k, 0) + v
     return ClusterMetrics(
         wall_s=wall_s,
         n_replicas=len(per_replica),
@@ -138,4 +150,5 @@ def aggregate(per_replica: List[ReplicaStats], *, wall_s: float, policy: str,
         mean_kv_fraction=float(np.mean(kv_means)) if kv_means else 0.0,
         prefix_hit_rate=hit_toks / prompt_toks if prompt_toks else 0.0,
         prefill_tokens_skipped=hit_toks,
-        prefix_blocks_shared=sum(p.blocks_shared for p in pfx))
+        prefix_blocks_shared=sum(p.blocks_shared for p in pfx),
+        finish_reasons=finish)

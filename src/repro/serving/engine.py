@@ -60,10 +60,27 @@ prefilled, attending over the gathered prefix K/V. Cached blocks whose
 last request released them stay warm in the index and are LRU-evicted
 when admission or mid-decode appends need blocks back.
 
+Token selection is the vectorized in-jit sampler
+(:mod:`repro.models.sampler`): every decode path consumes stacked
+per-request SamplingParams (temperature/top-k/top-p/seed) and
+counter-based RNG keyed on ``fold_in(seed, position)``, so sampled
+outputs are bit-reproducible across batch composition, bucketing,
+preemption, chunked-vs-serial prefill, and replicas — and greedy
+(``temperature=0``) stays bit-identical to the pre-sampler argmax.
+Requests finish with a ``finish_reason``: ``length`` (budget),
+``stop`` (sampled a stop/EOS token — blocks released the same step), or
+``abort`` (cancelled via :meth:`ContinuousBatchingEngine.abort`, which
+reclaims KV blocks and prefix-cache pins mid-flight, even
+mid-PREFILLING).
+
 The engine is the *measured-curves* source for BCA: sweeping ``max_batch``
 on a fixed workload yields T(B)/L(B)/KV(B) exactly like the paper's
 online-mode evaluation (Sec. IV), with real compute on CPU for reduced
 configs and the same code path targeting TPU meshes for full ones.
+
+:meth:`ContinuousBatchingEngine.run` is a thin batch-offline wrapper over
+the streaming facade (:mod:`repro.serving.api`) — online callers should
+use ``ServingAPI.submit() / stream() / abort()`` directly.
 """
 from __future__ import annotations
 
@@ -84,8 +101,11 @@ from repro.kvcache.prefix import PrefixIndex, PrefixStats, \
     prefix_cache_supported
 from repro.kvcache.view import PagedCacheView
 from repro.models.model import Model
-from repro.serving.metrics import ServingMetrics, collect
-from repro.serving.workload import Request
+from repro.models.sampler import (positions_array, sample_tokens,
+                                  stack_sampling)
+from repro.serving.metrics import ServingMetrics
+from repro.serving.workload import (FINISH_ABORT, FINISH_LENGTH,
+                                    FINISH_STOP, Request)
 
 
 @dataclasses.dataclass
@@ -172,6 +192,9 @@ class StepFunctions:
     paged: Callable
     prefix_prefill: Callable
     chunk_prefill: Callable
+    # vectorized sampler for the host-logits paths (prefill first token,
+    # gather decode); the zero-copy paged step fuses it in-jit instead
+    sample: Callable
 
     @classmethod
     def build(cls, model: Model, block_size: int) -> "StepFunctions":
@@ -194,7 +217,8 @@ class StepFunctions:
             chunk_prefill=jax.jit(
                 partial(_chunk_prefill_fn, model, block_size, layout),
                 static_argnames=("cache_len", "nb_prefix"),
-                donate_argnums=donate))
+                donate_argnums=donate),
+            sample=jax.jit(sample_tokens))
 
 
 def _bucket(n: int, b: int) -> int:
@@ -336,33 +360,77 @@ class ContinuousBatchingEngine:
         return max(1, min(req.max_new_tokens,
                           self.ecfg.max_model_len - req.prompt_len - 1))
 
-    def _finish(self, req: Request, t_done: float):
+    def _finish(self, req: Request, t_done: float, reason: str):
         # capture peak occupancy before the release drops it — a request
         # can finish straight out of prefill (max_new_tokens=1) without
         # ever reaching the decode-step sampling point
         self.max_kv_fraction = max(self.max_kv_fraction,
                                    self.pool.manager.used_fraction)
-        req.t_done = t_done
+        req.state.finish_reason = reason
+        req.state.t_done = t_done
         self.pool.release(req.req_id)
         self._tokens.pop(req.req_id, None)
         self._pos.pop(req.req_id, None)
+
+    def _finish_or_run(self, req: Request, t_done: float) -> bool:
+        """Shared finish protocol for the just-produced last token: stop
+        tokens end the request the same step (blocks released now, and
+        the stop token was already counted in this step's ITL/decode
+        accounting exactly like any other token — stop- and
+        length-finishes are symmetric); otherwise the length budget
+        decides. Returns True when the request finished."""
+        tok = req.state.output_tokens[-1]
+        if req.sampling.stops_on(tok):
+            self._finish(req, t_done, reason=FINISH_STOP)
+        elif req.state.generated >= self._limit(req):
+            self._finish(req, t_done, reason=FINISH_LENGTH)
+        else:
+            return False
+        return True
 
     def _post_prefill(self, req: Request, now: float):
         """Prefill just completed (first output token exists): stamp TTFT
         and either finish the request outright — a ``max_new_tokens=1``
         request is already satisfied and must not enter ``running`` (it
         used to decode one extra token because the finish check only ran
-        after a decode step) — or move it to the decode batch.
+        after a decode step), as is one whose very first token was a stop
+        token — or move it to the decode batch.
 
         ``now`` can be ahead of the wall clock when the caller
         fast-forwards idle time to the next arrival; take the max so TTFT
         stays on the same (possibly simulated) timeline as
         arrival_s/t_done and never goes negative."""
-        req.t_first_token = max(now, self._now(now))
-        if req.generated >= self._limit(req):
-            self._finish(req, req.t_first_token)
-        else:
+        req.state.t_first_token = max(now, self._now(now))
+        if not self._finish_or_run(req, req.state.t_first_token):
             self.running.append(req)
+
+    def abort(self, req_id: int, now: float = 0.0) -> bool:
+        """Cancel a request mid-flight (the API facade's abort path).
+
+        Works in every scheduling phase: queued (nothing allocated yet),
+        PREFILLING (partial chunk progress discarded), or decoding.
+        Every KV block is released — shared prefix blocks drop back to
+        their cache-only refcount, private ones return to the free list —
+        and the request finishes with ``finish_reason="abort"``. Returns
+        False when the request is unknown or already finished.
+        """
+        req = next((r for r in self.waiting if r.req_id == req_id), None)
+        if req is not None:
+            self.waiting.remove(req)
+        else:
+            for lst in (self.prefilling, self.running):
+                req = next((r for r in lst if r.req_id == req_id), None)
+                if req is not None:
+                    lst.remove(req)
+                    break
+        if req is None:
+            return False
+        self._prefilled.pop(req_id, None)
+        # clamp to arrival_s: aborting a queued request whose (simulated)
+        # arrival is still in the future must not produce a negative E2E
+        self._finish(req, max(self._now(now), req.arrival_s),
+                     reason=FINISH_ABORT)
+        return True
 
     def _admit(self, now: float):
         mgr = self.pool.manager
@@ -451,10 +519,15 @@ class ContinuousBatchingEngine:
     def _complete_prefill(self, req: Request, logits, now: float):
         """The one completion protocol both prefill modes share (the
         bit-identity guarantee depends on it staying single-sourced):
-        first output token from the final logits, decode bookkeeping,
+        first output token sampled from the final logits (RNG counter =
+        ``prompt_len``, the position the token occupies — identical for
+        serial, suffix-only, and chunked prefill, so all three produce
+        the same first token for the same seed), decode bookkeeping,
         prefix-index registration, TTFT stamp, finish-or-run."""
         rid = req.req_id
-        tok = int(jnp.argmax(logits[0]))
+        tok = int(self._steps.sample(
+            logits, *stack_sampling([req.sampling]),
+            positions_array([req.prompt_len]))[0])
         self._tokens[rid] = tok
         self._pos[rid] = req.prompt_len
         req.generated = 1       # prefill produced the first output token
@@ -618,9 +691,7 @@ class ContinuousBatchingEngine:
         self.pool.release(rid)
         self._tokens.pop(rid, None)
         self._pos.pop(rid, None)
-        req.output_tokens = []
-        req.generated = 0
-        req.t_first_token = None
+        req.state.reset_for_requeue()
         self.waiting.appendleft(req)
         self.preemptions += 1
 
@@ -701,9 +772,9 @@ class ContinuousBatchingEngine:
             self.pool.manager.append_token(rid, self._pos[rid] + 1)
             self.pool.ensure_writable(rid, self._pos[rid])
         if self.decode_mode == "paged":
-            next_tokens = self._decode_paged(rids)
+            next_tokens = self._decode_paged(reqs)
         else:
-            next_tokens = self._decode_gather(rids)
+            next_tokens = self._decode_gather(reqs)
         dt = time.perf_counter() - t0
         self.itl_samples.append(dt)
         self.stall_samples.append(t_sched)
@@ -720,20 +791,22 @@ class ContinuousBatchingEngine:
         still = []
         for i, r in enumerate(reqs):
             self._pos[r.req_id] += 1
-            self._tokens[r.req_id] = int(next_tokens[i])
-            r.generated += 1
-            r.output_tokens.append(int(next_tokens[i]))
-            if r.generated >= self._limit(r):
-                self._finish(r, now + dt)
-            else:
+            tok = int(next_tokens[i])
+            self._tokens[r.req_id] = tok
+            r.state.generated += 1
+            r.state.output_tokens.append(tok)
+            if not self._finish_or_run(r, now + dt):
                 still.append(r)
         self.running = still
         return True
 
     # ------------------------------------------------------ decode paths --
-    def _decode_paged(self, rids: List[int]) -> np.ndarray:
-        """Zero-copy step: block-table attention directly on the pool."""
-        B = len(rids)
+    def _decode_paged(self, reqs: List[Request]) -> np.ndarray:
+        """Zero-copy step: block-table attention directly on the pool,
+        next token sampled inside the same jit (per-request params ride
+        as traced [B] vectors; padding rows are greedy and discarded)."""
+        B = len(reqs)
+        rids = [r.req_id for r in reqs]
         positions = [self._pos[rid] for rid in rids]
         max_blocks = max(len(self.pool.manager.tables[rid]) for rid in rids)
         nb_pad = _pow2_bucket(max_blocks, lo=4)
@@ -741,14 +814,20 @@ class ContinuousBatchingEngine:
         view = self.pool.view(rids, positions, nb_pad, batch_pad)
         tokens = np.zeros((batch_pad,), np.int32)
         tokens[:B] = [self._tokens[rid] for rid in rids]
+        temp, top_k, top_p, seed = stack_sampling(
+            [r.sampling for r in reqs], pad_to=batch_pad)
         next_tokens, new_pool = self._paged_jit(
             self.params, view.pool, view.tables, view.lengths,
-            view.positions, view.slots, jnp.asarray(tokens))
+            view.positions, view.slots, jnp.asarray(tokens),
+            jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+            jnp.asarray(seed))
         self.pool.commit(new_pool)
         return np.asarray(next_tokens)[:B]
 
-    def _decode_gather(self, rids: List[int]) -> np.ndarray:
-        """Legacy dense-copy step (documented fallback)."""
+    def _decode_gather(self, reqs: List[Request]) -> np.ndarray:
+        """Legacy dense-copy step (documented fallback); sampling runs as
+        a separate jitted call on the returned logits."""
+        rids = [r.req_id for r in reqs]
         max_pos = max(self._pos[rid] for rid in rids)
         pad_blocks = self.pool.manager.blocks_needed(
             _bucket(max_pos + 1, self.ecfg.block_size * 4))
@@ -758,30 +837,21 @@ class ContinuousBatchingEngine:
         logits, new_cache = self._decode_jit(self.params, view, tokens, pos)
         self.pool.scatter_new_token(rids, [self._pos[r] for r in rids],
                                     new_cache)
-        return np.asarray(jnp.argmax(logits, axis=-1))
+        next_tokens = self._steps.sample(
+            logits, *stack_sampling([r.sampling for r in reqs]),
+            positions_array([self._pos[rid] + 1 for rid in rids]))
+        return np.asarray(next_tokens)
 
     # --------------------------------------------------------------- run --
     def run(self, requests: List[Request]) -> ServingMetrics:
-        for r in requests:
-            self.add_request(r)
-        t_start = time.perf_counter()
-        self.clock = lambda: time.perf_counter() - t_start
-        now = 0.0
-        while self.busy:
-            if not self.running and not self.prefilling and self.waiting:
-                now = max(now, self.waiting[0].arrival_s)
-            self.step(now)
-            # keep `now` monotonic across fast-forward jumps so t_done
-            # never lands behind the arrival time it was admitted at
-            now = max(now, time.perf_counter() - t_start)
-        wall = time.perf_counter() - t_start
-        return collect(requests, wall, self.itl_samples,
-                       self.max_kv_fraction, self.batch_samples,
-                       kv_samples=self.kv_fraction_samples,
-                       prefix=self.prefix.stats if self.prefix else None,
-                       stall_samples=self.stall_samples,
-                       prefill_token_samples=self.prefill_token_samples,
-                       decode_token_samples=self.decode_token_samples)
+        """Batch-offline compatibility wrapper over the streaming facade
+        (:class:`repro.serving.api.ServingAPI`): submit everything, drive
+        steps to completion with arrival fast-forwarding, collect
+        metrics. The wall clock installed for timestamping is restored on
+        exit, so back-to-back runs — or facade/step use after a run —
+        never stamp timestamps against a stale epoch."""
+        from repro.serving.api import ServingAPI
+        return ServingAPI(self).run(requests)
 
 
 def _prefill_fn(model: Model, params, batch, cache_len: int):
@@ -828,15 +898,21 @@ def _chunk_prefill_fn(model: Model, block_size: int, layout, params, pool,
 
 
 def _paged_decode_fn(model: Model, block_size: int, params, pool, tables,
-                     lengths, positions, slots, tokens):
+                     lengths, positions, slots, tokens, temperature,
+                     top_k, top_p, seed):
     """One fused zero-copy decode step (jitted; ``pool`` donated).
 
     Rebuilds the view from its pytree parts (jit-friendly), runs the
-    block-table decode, and returns (next_tokens [B], new_pool) — argmax
-    happens on device so only B token ids cross back to the host.
+    block-table decode, and samples each request's next token in the same
+    program — greedy rows are pure argmax (bit-identical to the
+    pre-sampler step), sampled rows draw with the counter-based key
+    ``fold_in(seed, positions + 1)`` (the position the new token will
+    occupy). Only B token ids cross back to the host.
     """
     view = PagedCacheView(pool, tables, lengths, positions, slots,
                           block_size)
     logits, new_pool = model.decode_step(params, view, tokens, positions,
                                          lengths=lengths)
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_pool
+    next_tokens = sample_tokens(logits, temperature, top_k, top_p, seed,
+                                positions + 1)
+    return next_tokens, new_pool

@@ -7,12 +7,12 @@ BCA hooks use to size B_opt from *effective* per-request KV footprint."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.kvcache.prefix import PrefixStats
-from repro.serving.workload import Request
+from repro.serving.workload import FINISH_REASONS, Request
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +67,11 @@ class ServingMetrics:
     stall_series: List[float] = dataclasses.field(default_factory=list)
     prefill_tokens_per_step: float = 0.0     # mean computed prompt tokens
     decode_tokens_per_step: float = 0.0      # mean decoded tokens
+    # how the completed requests ended: {"length": n, "stop": n,
+    # "abort": n} (stop-token finishes release blocks the same step and
+    # are accounted identically to length finishes; this breakdown is the
+    # only place they differ)
+    finish_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def throughput(self) -> float:
@@ -93,6 +98,11 @@ class ServingMetrics:
                 f"pf/step={self.prefill_tokens_per_step:.1f} tok  "
                 f"dec/step={self.decode_tokens_per_step:.1f} tok")
 
+    def finish_row(self) -> str:
+        parts = [f"{k}={self.finish_reasons.get(k, 0)}"
+                 for k in FINISH_REASONS]
+        return "finish: " + " ".join(parts)
+
 
 def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
             max_kv_fraction: float, batch_samples: List[int],
@@ -108,6 +118,12 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
     e2e = [r.t_done - r.arrival_s for r in done]
     ttft = [r.t_first_token - r.arrival_s for r in done
             if r.t_first_token is not None]
+    finish: Dict[str, int] = {}
+    for r in done:
+        # legacy fabricated requests may carry t_done with no reason
+        reason = getattr(r, "finish_reason", None)
+        if reason is not None:
+            finish[reason] = finish.get(reason, 0) + 1
     return ServingMetrics(
         wall_s=wall_s,
         total_tokens=total_in + total_out,
@@ -131,4 +147,5 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
         prefill_tokens_per_step=(float(np.mean(prefill_token_samples))
                                  if prefill_token_samples else 0.0),
         decode_tokens_per_step=(float(np.mean(decode_token_samples))
-                                if decode_token_samples else 0.0))
+                                if decode_token_samples else 0.0),
+        finish_reasons=finish)

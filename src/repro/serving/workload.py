@@ -1,9 +1,23 @@
-"""Synthetic workload generator with ShareGPT length statistics.
+"""Request/response data model + synthetic workload generator.
 
-The paper samples 2000 requests from cleaned ShareGPT (mean 161 input /
-338 output tokens) in online mode and fixed 161/338 in offline mode. We
-generate token ids synthetically with the same length distributions
-(lognormal spread around the means, matching the heavy tail of chat data).
+The serving API splits a request into two halves:
+
+* :class:`Request` — the *frozen input*: prompt token ids, arrival time,
+  and a :class:`SamplingParams` describing how to decode (temperature /
+  top-k / top-p, a per-request RNG seed, stop tokens, the output budget).
+  Input fields cannot be reassigned after construction — routers, prefix
+  caches, and replicas may all hold the same object.
+* :class:`RequestState` — the *engine-owned output*: generated tokens,
+  timestamps, and the ``finish_reason`` (``"length"`` / ``"stop"`` /
+  ``"abort"``). It hangs off ``Request.state``; the legacy mutable
+  attributes (``output_tokens``, ``t_done``, ...) are kept as read/write
+  proxies so pre-redesign call sites keep working.
+
+The generators below produce ShareGPT-statistics workloads: the paper
+samples 2000 requests from cleaned ShareGPT (mean 161 input / 338 output
+tokens) in online mode and fixed 161/338 in offline mode. We generate
+token ids synthetically with the same length distributions (lognormal
+spread around the means, matching the heavy tail of chat data).
 
 Arrival processes (``arrival_pattern``) beyond the paper's Poisson stream
 stress the cluster router under non-stationary load:
@@ -21,7 +35,7 @@ stress the cluster router under non-stationary load:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -30,22 +44,207 @@ SHAREGPT_MEAN_OUT = 338
 
 ARRIVAL_PATTERNS = ("poisson", "burst", "ramp")
 
+# the complete finish_reason vocabulary (GenerationOutput contract)
+FINISH_LENGTH = "length"     # hit max_new_tokens / model-length budget
+FINISH_STOP = "stop"         # sampled a stop/EOS token
+FINISH_ABORT = "abort"       # cancelled via the API (blocks reclaimed)
+FINISH_REASONS = (FINISH_LENGTH, FINISH_STOP, FINISH_ABORT)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode contract (frozen; travels with the Request).
+
+    ``temperature == 0`` (the default) is greedy argmax — bit-identical
+    to the pre-sampler engine. With ``temperature > 0`` the engine
+    samples from the (optionally top-k / top-p truncated) softmax using
+    counter-based per-request RNG: the key for the token at sequence
+    position ``p`` is ``fold_in(PRNGKey(seed), p)``, so a fixed
+    ``seed`` reproduces the same tokens bit-for-bit regardless of batch
+    composition, bucketing, preemption, chunked-vs-serial prefill, or
+    which replica served the request.
+
+    ``stop_token_ids`` double as the EOS set (there is no tokenizer in
+    this repo): sampling one of them finishes the request the same step
+    with ``finish_reason="stop"`` — unless ``ignore_eos`` is set, which
+    decodes through stop tokens to the length budget (benchmark mode).
+    """
+    temperature: float = 0.0
+    top_k: int = 0               # 0 = disabled (full vocabulary)
+    top_p: float = 1.0           # 1.0 = disabled (no nucleus truncation)
+    seed: int = 0                # per-request RNG stream id
+    max_new_tokens: int = 16
+    stop_token_ids: Tuple[int, ...] = ()
+    ignore_eos: bool = False
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(
+                f"temperature must be >= 0 (0 = greedy), "
+                f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = disabled), "
+                             f"got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {self.max_new_tokens}")
+        # normalize the seed into the PRNG key domain: any Python int is
+        # accepted (CLI flags pass negatives freely) and wraps mod 2**32
+        # deterministically — NumPy 2 would otherwise raise OverflowError
+        # mid-decode-step when the sampler stacks it into a uint32 vector
+        object.__setattr__(self, "seed", int(self.seed) % (1 << 32))
+        # normalize to a hashable tuple of ints (callers pass lists/arrays)
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def stops_on(self, token: int) -> bool:
+        """Does sampling ``token`` finish the request with reason "stop"?"""
+        return (not self.ignore_eos) and token in self.stop_token_ids
+
 
 @dataclasses.dataclass
-class Request:
-    req_id: int
-    prompt: np.ndarray           # int32 token ids
-    max_new_tokens: int
-    arrival_s: float = 0.0
-    # filled by the engine:
+class RequestState:
+    """The engine-owned mutable half of a request.
+
+    Only the engine (and the API facade's abort path) writes these;
+    everything else observes them through the ``Request`` proxies or as
+    :class:`~repro.serving.api.GenerationOutput` stream events.
+    """
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
     generated: int = 0
     output_tokens: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None
+
+    def reset_for_requeue(self):
+        """Preemption (recompute-style): forget the in-flight output so
+        re-admission regenerates it from scratch. The terminal fields
+        (``t_done``/``finish_reason``) are by construction still unset —
+        finished requests are never preempted."""
+        self.t_first_token = None
+        self.generated = 0
+        self.output_tokens = []
+
+
+class Request:
+    """Frozen input half of a request + its attached engine state.
+
+    Input fields (``req_id``, ``prompt``, ``sampling``, ``arrival_s``)
+    cannot be reassigned after construction. The legacy engine-mutated
+    attributes (``t_first_token``, ``t_done``, ``generated``,
+    ``output_tokens``, plus the new ``finish_reason``) are read/write
+    proxies into ``self.state`` so existing call sites — and tests that
+    fabricate completed requests — keep working unchanged.
+
+    ``max_new_tokens`` may still be passed directly (legacy call shape);
+    it is folded into a default ``SamplingParams``. Passing both it and
+    ``sampling`` is an error unless they agree.
+    """
+
+    _INPUT_FIELDS = ("req_id", "prompt", "sampling", "arrival_s")
+
+    def __init__(self, req_id: int, prompt: np.ndarray,
+                 max_new_tokens: Optional[int] = None,
+                 arrival_s: float = 0.0, *,
+                 sampling: Optional[SamplingParams] = None):
+        if sampling is None:
+            if max_new_tokens is None:
+                raise TypeError(
+                    "Request needs either sampling=SamplingParams(...) or "
+                    "the legacy max_new_tokens=")
+            sampling = SamplingParams(max_new_tokens=max_new_tokens)
+        elif max_new_tokens is not None \
+                and max_new_tokens != sampling.max_new_tokens:
+            raise ValueError(
+                f"conflicting output budgets: max_new_tokens="
+                f"{max_new_tokens} vs sampling.max_new_tokens="
+                f"{sampling.max_new_tokens}; set it on SamplingParams only")
+        object.__setattr__(self, "req_id", int(req_id))
+        object.__setattr__(self, "prompt", prompt)
+        object.__setattr__(self, "sampling", sampling)
+        object.__setattr__(self, "arrival_s", float(arrival_s))
+        object.__setattr__(self, "state", RequestState())
+
+    def __setattr__(self, name, value):
+        if name in self._INPUT_FIELDS:
+            raise AttributeError(
+                f"Request.{name} is frozen input; engine-mutated fields "
+                f"live on Request.state")
+        object.__setattr__(self, name, value)
+
+    def __repr__(self):
+        return (f"Request(req_id={self.req_id}, "
+                f"prompt_len={self.prompt_len}, "
+                f"sampling={self.sampling}, arrival_s={self.arrival_s}, "
+                f"generated={self.state.generated}, "
+                f"finish_reason={self.state.finish_reason!r})")
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def max_new_tokens(self) -> int:
+        return self.sampling.max_new_tokens
+
+    # --- legacy mutable-field proxies (engine-owned state) ---
+    @property
+    def t_first_token(self) -> Optional[float]:
+        return self.state.t_first_token
+
+    @t_first_token.setter
+    def t_first_token(self, v):
+        self.state.t_first_token = v
+
+    @property
+    def t_done(self) -> Optional[float]:
+        return self.state.t_done
+
+    @t_done.setter
+    def t_done(self, v):
+        self.state.t_done = v
+
+    @property
+    def generated(self) -> int:
+        return self.state.generated
+
+    @generated.setter
+    def generated(self, v):
+        self.state.generated = v
+
+    @property
+    def output_tokens(self) -> List[int]:
+        return self.state.output_tokens
+
+    @output_tokens.setter
+    def output_tokens(self, v):
+        self.state.output_tokens = v
+
+    @property
+    def finish_reason(self) -> Optional[str]:
+        return self.state.finish_reason
+
+    @finish_reason.setter
+    def finish_reason(self, v):
+        self.state.finish_reason = v
+
+
+def _request_sampling(template: Optional[SamplingParams], i: int,
+                      max_new_tokens: int) -> SamplingParams:
+    """Per-request SamplingParams from a workload-level template: request
+    ``i`` gets RNG stream ``template.seed + i`` (distinct streams so
+    sampled requests aren't token-for-token clones of each other) and its
+    own output budget."""
+    if template is None:
+        return SamplingParams(max_new_tokens=max_new_tokens)
+    return dataclasses.replace(template, seed=template.seed + i,
+                               max_new_tokens=max_new_tokens)
 
 
 def arrival_times(n: int, rate: float, *, pattern: str = "poisson",
@@ -83,7 +282,9 @@ def shared_prefix_workload(n_tenants: int, per_tenant: int, vocab: int, *,
                            arrival_rate: Optional[float] = None,
                            arrival_pattern: str = "poisson",
                            burst_size: int = 8,
-                           interleave: bool = True) -> List[Request]:
+                           interleave: bool = True,
+                           sampling: Optional[SamplingParams] = None
+                           ) -> List[Request]:
     """Shared-system-prompt workload: N tenants x M requests.
 
     Each tenant has one random ``prefix_len``-token system prompt; every
@@ -122,16 +323,18 @@ def shared_prefix_workload(n_tenants: int, per_tenant: int, vocab: int, *,
     for i, (t, _) in enumerate(order):
         suffix = rng.integers(0, vocab, size=suffix_len).astype(np.int32)
         prompt = np.concatenate([prefixes[t], suffix])
-        reqs.append(Request(req_id=i, prompt=prompt,
-                            max_new_tokens=max_new_tokens,
-                            arrival_s=float(arrivals[i])))
+        reqs.append(Request(
+            req_id=i, prompt=prompt, arrival_s=float(arrivals[i]),
+            sampling=_request_sampling(sampling, i, max_new_tokens)))
     return reqs
 
 
 def long_short_workload(n_short: int, n_long: int, vocab: int, *,
                         short_len: int = 24, long_len: int = 384,
                         short_new: int = 24, long_new: int = 16,
-                        every: int = 4, seed: int = 0) -> List[Request]:
+                        every: int = 4, seed: int = 0,
+                        sampling: Optional[SamplingParams] = None
+                        ) -> List[Request]:
     """Head-of-line-blocking stress shape: a stream of short chatty
     prompts with a long prompt injected after every ``every`` short ones.
 
@@ -161,7 +364,8 @@ def long_short_workload(n_short: int, n_long: int, vocab: int, *,
     reqs = []
     for i, (lin, lout) in enumerate(shapes):
         prompt = rng.integers(0, vocab, size=lin).astype(np.int32)
-        reqs.append(Request(req_id=i, prompt=prompt, max_new_tokens=lout))
+        reqs.append(Request(req_id=i, prompt=prompt,
+                            sampling=_request_sampling(sampling, i, lout)))
     return reqs
 
 
@@ -171,7 +375,9 @@ def sharegpt_like(n: int, vocab: int, *, seed: int = 0,
                   fixed: bool = False, sigma: float = 0.7,
                   arrival_rate: Optional[float] = None,
                   arrival_pattern: str = "poisson", burst_size: int = 8,
-                  max_len: int = 2048) -> List[Request]:
+                  max_len: int = 2048,
+                  sampling: Optional[SamplingParams] = None
+                  ) -> List[Request]:
     """``fixed=True`` = the paper's offline mode (exact 161/338 lengths)."""
     if arrival_pattern not in ARRIVAL_PATTERNS:
         raise ValueError(f"arrival pattern must be one of "
@@ -207,6 +413,6 @@ def sharegpt_like(n: int, vocab: int, *, seed: int = 0,
         elif arrival_rate:
             t += rng.exponential(1.0 / arrival_rate)
         prompt = rng.integers(0, vocab, size=lin).astype(np.int32)
-        reqs.append(Request(req_id=i, prompt=prompt, max_new_tokens=lout,
-                            arrival_s=t))
+        reqs.append(Request(req_id=i, prompt=prompt, arrival_s=t,
+                            sampling=_request_sampling(sampling, i, lout)))
     return reqs

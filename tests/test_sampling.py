@@ -1,0 +1,220 @@
+"""Sampler determinism: the API redesign's reproducibility contract.
+
+The in-jit sampler keys every draw on ``fold_in(PRNGKey(seed),
+position)`` — a pure function of the request's own (seed, position) — so
+for a fixed per-request seed the sampled tokens must be bit-identical
+across batch sizes, preemption + re-admission, chunked vs. serial
+prefill, and replica counts. ``temperature=0`` must remain exactly the
+pre-redesign greedy argmax (the naive-loop golden below is the same
+reference the original engine test pinned)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model, decode_step, init_params, prefill
+from repro.models.sampler import (positions_array, sample_tokens,
+                                  stack_sampling)
+from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                           ReplicatedCluster, SamplingParams, sharegpt_like)
+
+SAMPLED = SamplingParams(temperature=0.8, top_k=20, top_p=0.95, seed=7)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _wl(cfg, sampling=None, n=5, seed=2, mean_in=12, mean_out=8,
+        max_len=48, sigma=0.3):
+    return sharegpt_like(n, cfg.vocab_size, seed=seed, mean_in=mean_in,
+                         mean_out=mean_out, max_len=max_len, sigma=sigma,
+                         sampling=sampling)
+
+
+def _run(setup, rules, sampling, *, wl_kw=None, **ecfg_kw):
+    cfg, params = setup
+    kw = dict(max_batch=4, block_size=8, kv_pool_tokens=4096,
+              max_model_len=256, prefill_bucket=16)
+    kw.update(ecfg_kw)
+    eng = ContinuousBatchingEngine(Model(cfg, rules), params,
+                                   EngineConfig(**kw))
+    reqs = _wl(cfg, sampling, **(wl_kw or {}))
+    eng.run(reqs)
+    assert all(r.t_done is not None for r in reqs)
+    return [list(map(int, r.output_tokens)) for r in reqs], eng
+
+
+# ------------------------------------------------------- sampler unit ----
+def test_greedy_rows_are_bitwise_argmax():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(5, 33)).astype(np.float32))
+    out = sample_tokens(logits, *map(jnp.asarray, stack_sampling(
+        [SamplingParams()] * 5)), jnp.arange(5, dtype=jnp.int32))
+    assert (np.asarray(out)
+            == np.asarray(jnp.argmax(logits, axis=-1))).all()
+
+
+def test_top_k_one_and_tiny_top_p_collapse_to_argmax():
+    """With the distribution truncated to a single token, sampling must
+    return it regardless of the noise draw."""
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(4, 57)).astype(np.float32) * 5)
+    for sp in (SamplingParams(temperature=1.3, top_k=1, seed=3),
+               SamplingParams(temperature=0.7, top_p=1e-6, seed=9)):
+        out = sample_tokens(logits, *map(jnp.asarray, stack_sampling(
+            [sp] * 4)), jnp.arange(4, dtype=jnp.int32))
+        assert (np.asarray(out)
+                == np.asarray(jnp.argmax(logits, axis=-1))).all()
+
+
+def test_top_k_restricts_support():
+    """top_k=k: every draw must land in the k largest logits."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(1, 64)).astype(np.float32))
+    top4 = set(np.asarray(jnp.argsort(logits[0])[-4:]).tolist())
+    sp = SamplingParams(temperature=1.5, top_k=4, seed=0)
+    for pos in range(32):
+        out = sample_tokens(logits, *map(jnp.asarray, stack_sampling(
+            [sp])), jnp.asarray([pos], jnp.int32))
+        assert int(out[0]) in top4, pos
+
+
+def test_draw_depends_only_on_seed_and_position():
+    """The same (seed, position) must draw the same token whatever the
+    row index or batch size — the batch-composition-independence axiom
+    the engine-level identities build on."""
+    rng = np.random.default_rng(3)
+    row = rng.normal(size=(1, 48)).astype(np.float32)
+    logits3 = jnp.asarray(np.repeat(row, 3, axis=0))
+    sp = SamplingParams(temperature=1.0, seed=5)
+    others = SamplingParams(temperature=0.9, seed=99)
+    batch = sample_tokens(
+        logits3, *map(jnp.asarray, stack_sampling([others, sp, others])),
+        jnp.asarray([4, 17, 80], jnp.int32))
+    solo = sample_tokens(
+        jnp.asarray(row), *map(jnp.asarray, stack_sampling([sp])),
+        jnp.asarray([17], jnp.int32))
+    assert int(batch[1]) == int(solo[0])
+    # ...and different positions really are different streams (on a flat
+    # distribution the draw is pure noise, so 8 positions collapsing to
+    # one token would mean the counter is ignored)
+    flat = jnp.zeros((1, 997), jnp.float32)
+    many = [int(sample_tokens(flat, *map(jnp.asarray, stack_sampling(
+        [sp])), jnp.asarray([p], jnp.int32))[0]) for p in range(8)]
+    assert len(set(many)) > 1
+
+
+def test_top_p_just_below_one_does_not_collapse_to_greedy():
+    """float32 cumsum can undershoot 1.0; a top_p inside that gap must
+    behave like 'keep (almost) everything', not silently truncate the
+    distribution to the single argmax token."""
+    flat = jnp.zeros((1, 997), jnp.float32)
+    sp = SamplingParams(temperature=1.0, top_p=1.0 - 1e-7, seed=4)
+    draws = {int(sample_tokens(flat, *map(jnp.asarray, stack_sampling(
+        [sp])), jnp.asarray([p], jnp.int32))[0]) for p in range(8)}
+    assert len(draws) > 1, "near-1.0 top_p collapsed to a single token"
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(max_new_tokens=0)
+    sp = SamplingParams(stop_token_ids=np.asarray([3, 5]))
+    assert sp.stop_token_ids == (3, 5)
+    assert sp.stops_on(3) and not sp.stops_on(4)
+    assert not dataclasses.replace(sp, ignore_eos=True).stops_on(3)
+    # any int seed is accepted and wraps into the uint32 key domain
+    # (NumPy 2 raises OverflowError on out-of-range uint32 casts, which
+    # would otherwise kill the engine mid-step)
+    assert SamplingParams(seed=-1).seed == (1 << 32) - 1
+    assert SamplingParams(seed=1 << 33).seed == 0
+    stack_sampling([SamplingParams(seed=-1)])   # must not raise
+
+
+def test_stack_sampling_pads_greedy():
+    temp, top_k, top_p, seed = stack_sampling([SAMPLED], pad_to=4)
+    assert temp.shape == (4,) and temp[0] > 0 and (temp[1:] == 0).all()
+    assert (top_p[1:] == 1.0).all() and seed[0] == 7
+    assert (positions_array([11], pad_to=4)
+            == np.asarray([11, 0, 0, 0])).all()
+
+
+# ---------------------------------------------------- engine identities ----
+def test_greedy_matches_naive_reference(setup, rules):
+    """temperature=0 through the sampler == the naive argmax loop through
+    the raw model — the pre-redesign greedy golden."""
+    cfg, params = setup
+    outs, _ = _run(setup, rules, SamplingParams())   # explicit greedy
+    reqs = _wl(cfg)
+    for r, out in zip(reqs, outs):
+        toks = jnp.asarray(r.prompt[None])
+        lg, cache, _ = prefill(params, cfg, rules, {"tokens": toks},
+                               cache_len=len(r.prompt) + len(out))
+        naive = [int(jnp.argmax(lg[0]))]
+        for i in range(len(out) - 1):
+            t = jnp.asarray([naive[-1]], jnp.int32)
+            lg, cache = decode_step(params, cfg, rules, cache, t,
+                                    jnp.int32(len(r.prompt) + i))
+            naive.append(int(jnp.argmax(lg[0])))
+        assert out == naive, r.req_id
+
+
+def test_sampled_identical_across_batch_sizes(setup, rules):
+    outs = {mb: _run(setup, rules, SAMPLED, max_batch=mb)[0]
+            for mb in (1, 4, 8)}
+    assert outs[1] == outs[4] == outs[8]
+    greedy, _ = _run(setup, rules, None)
+    assert outs[4] != greedy, "temperature=0.8 should not replay greedy"
+
+
+def test_sampled_identical_chunked_vs_serial_prefill(setup, rules):
+    wl_kw = dict(mean_in=40, max_len=90, seed=6)
+    serial, _ = _run(setup, rules, SAMPLED, wl_kw=wl_kw)
+    for chunk in (16, 24):
+        chunked, eng = _run(setup, rules, SAMPLED, wl_kw=wl_kw,
+                            prefill_chunk_tokens=chunk)
+        assert eng.chunking
+        assert chunked == serial, chunk
+
+
+def test_sampled_identical_across_preemption(setup, rules):
+    """Recompute-style preemption replays the same (seed, position)
+    streams, so a starved pool must emit the same sampled tokens as a
+    roomy one (the sampled analogue of the zero-copy preemption test)."""
+    wl_kw = dict(n=6, seed=11, mean_in=20, mean_out=36, max_len=60,
+                 sigma=0.1)
+    tight, eng = _run(setup, rules, SAMPLED, wl_kw=wl_kw, max_batch=6,
+                      kv_pool_tokens=256, max_model_len=96)
+    assert eng.preemptions > 0, "workload was meant to force preemption"
+    roomy, eng2 = _run(setup, rules, SAMPLED, wl_kw=wl_kw, max_batch=6,
+                       kv_pool_tokens=8192, max_model_len=96)
+    assert eng2.preemptions == 0
+    assert tight == roomy
+
+
+def test_sampled_identical_across_replica_counts(setup, rules):
+    cfg, params = setup
+    model = Model(cfg, rules)
+    ecfg = EngineConfig(max_batch=4, block_size=8, kv_pool_tokens=4096,
+                        max_model_len=128, prefill_bucket=16)
+    outs = {}
+    for n_rep in (1, 2):
+        cluster = ReplicatedCluster.colocated(model, params, ecfg, n_rep,
+                                              mode="sync")
+        reqs = _wl(cfg, SAMPLED)
+        m = cluster.run(reqs)
+        assert m.completed == len(reqs)
+        outs[n_rep] = [list(map(int, r.output_tokens)) for r in reqs]
+    assert outs[1] == outs[2]
