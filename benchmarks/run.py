@@ -39,6 +39,10 @@ def main() -> int:
                     help="also run the streaming-API smoke benchmark "
                          "(sampled vs greedy throughput, abort-reclaim "
                          "latency, stream==run token identity)")
+    ap.add_argument("--faults", action="store_true",
+                    help="also run the fault-tolerance benchmark (kill "
+                         "1 of 2 replicas mid-run: redrive bit-identity, "
+                         "goodput retention, graceful overload shedding)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import paper_claims as pc
@@ -132,6 +136,21 @@ def main() -> int:
                     f"{o['abort']['mid_decode']['abort_us']:.0f}")
 
         _run("stream_api", lambda: run_suite(smoke=True), _stream_derive)
+
+    if args.faults:
+        from benchmarks.fault_tolerance import run_suite as faults_suite
+
+        def _faults_derive(o):
+            for key in ("claim_full_completion", "claim_bit_identical",
+                        "claim_redrive_happened", "claim_goodput_floor",
+                        "claim_graceful_overload"):
+                claim(o, key)
+            ret = min(s["goodput_retention"] for s in o["scenarios"])
+            return (f"min_goodput_retention={ret:.2f};"
+                    f"shed={o['overload'].get('shed', 0)}")
+
+        _run("fault_tolerance", lambda: faults_suite(smoke=True),
+             _faults_derive)
 
     # §Roofline aggregation from the dry-run artifacts, if present
     from benchmarks.roofline_table import load_records, summary

@@ -65,6 +65,32 @@ def main():
                     help="serve through the online facade (submit/"
                          "stream/drain) and print per-event token deltas "
                          "for the first request instead of a batch run")
+    ap.add_argument("--deadline", type=float, default=0.0, metavar="S",
+                    help="per-request end-to-end deadline in seconds "
+                         "(0 = none); expired requests finish with "
+                         "reason='deadline' and release KV immediately")
+    ap.add_argument("--ttft-deadline", type=float, default=0.0,
+                    metavar="S",
+                    help="per-request time-to-first-token deadline in "
+                         "seconds (0 = none); stops binding once the "
+                         "first token is out")
+    ap.add_argument("--inject-fault", action="append", default=[],
+                    metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'replica=1,step=50' (kind defaults to kill; "
+                         "also kind=delay,seconds=0.1 or "
+                         "kind=alloc-fail); repeatable")
+    ap.add_argument("--max-waiting", type=int, default=0, metavar="N",
+                    help="bound each replica's arrival queue at N "
+                         "requests (0 = unbounded); overflow is shed "
+                         "with reason='shed', never an engine crash")
+    ap.add_argument("--shed-kv", type=float, default=0.0, metavar="F",
+                    help="shed new arrivals while free KV fraction is "
+                         "below F and a backlog exists (0 = disabled)")
+    ap.add_argument("--watchdog", type=float, default=0.0, metavar="S",
+                    help="mark a replica wedged (and route around it) "
+                         "when a step exceeds S seconds (0 = disabled; "
+                         "cluster mode only)")
     args = ap.parse_args()
 
     import jax
@@ -131,10 +157,21 @@ def main():
                             kv_pool_tokens=(budget // n_rep) // 64 * 64,
                             max_model_len=512, prefill_bucket=64,
                             prefix_cache=args.prefix_cache,
-                            prefill_chunk_tokens=prefill_chunk)
+                            prefill_chunk_tokens=prefill_chunk,
+                            max_waiting=args.max_waiting or None,
+                            shed_kv_fraction=args.shed_kv or None)
         sampling = SamplingParams(temperature=args.temperature,
                                   top_k=args.top_k, top_p=args.top_p,
-                                  seed=args.seed)
+                                  seed=args.seed,
+                                  deadline_s=args.deadline or None,
+                                  ttft_deadline_s=args.ttft_deadline
+                                  or None)
+        faults = None
+        if args.inject_fault:
+            from repro.serving import FaultInjector
+            faults = FaultInjector.parse(*args.inject_fault)
+            print(f"[faults] injecting {len(faults.specs)} fault(s): "
+                  + "; ".join(str(s) for s in faults.specs))
         if args.shared_prefix_tenants > 0:
             from repro.serving import shared_prefix_workload
             # round per-tenant count up, then trim so exactly --requests
@@ -152,9 +189,14 @@ def main():
             from repro.serving import ReplicatedCluster
             backend = ReplicatedCluster.colocated(
                 model, params, ecfg, n_rep, policy=args.policy,
-                mode=args.cluster_mode)
+                mode=args.cluster_mode, faults=faults,
+                watchdog_s=args.watchdog or None)
         else:
             backend = ContinuousBatchingEngine(model, params, ecfg)
+            if faults is not None:
+                # single engine = replica 0; kills surface as
+                # InjectedFault (no peer to redrive onto)
+                backend.faults = faults
         if args.stream:
             # online path: submit everything through the facade, stream
             # the first request's token deltas, drain the rest

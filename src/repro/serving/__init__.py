@@ -1,11 +1,15 @@
 from repro.serving.engine import (ContinuousBatchingEngine, EngineConfig,  # noqa
-                                  StepFunctions)
-from repro.serving.workload import (FINISH_ABORT, FINISH_LENGTH,  # noqa
-                                    FINISH_REASONS, FINISH_STOP, Request,
-                                    RequestState, SamplingParams,
+                                  RequestTooLarge, StepFunctions)
+from repro.serving.workload import (FINISH_ABORT, FINISH_DEADLINE,  # noqa
+                                    FINISH_FAILED, FINISH_LENGTH,
+                                    FINISH_REASONS, FINISH_SHED, FINISH_STOP,
+                                    Request, RequestState, SamplingParams,
                                     arrival_times, long_short_workload,
                                     shared_prefix_workload, sharegpt_like)
-from repro.serving.metrics import Percentiles, ServingMetrics  # noqa
+from repro.serving.faults import (FAULT_KINDS, FaultInjector, FaultSpec,  # noqa
+                                  InjectedFault, parse_fault)
+from repro.serving.metrics import (Percentiles, ServingMetrics,  # noqa
+                                   collect_from_engine)
 from repro.serving.cluster import (ClusterMetrics, ReplicatedCluster,  # noqa
                                    autoscale)
 from repro.serving.api import (GenerationOutput, RequestHandle,  # noqa

@@ -50,7 +50,7 @@ import numpy as np
 from repro.serving.cluster.cluster import ReplicatedCluster
 from repro.serving.cluster.metrics import ClusterMetrics
 from repro.serving.engine import ContinuousBatchingEngine
-from repro.serving.metrics import ServingMetrics, collect
+from repro.serving.metrics import ServingMetrics, collect_from_engine
 from repro.serving.workload import FINISH_ABORT, Request, SamplingParams
 
 
@@ -61,8 +61,10 @@ class GenerationOutput:
     ``new_token_ids`` is the delta since the previous event for the same
     handle; ``token_ids`` the cumulative output so far. The last event
     has ``finished=True`` and a non-None ``finish_reason`` (``length`` /
-    ``stop`` / ``abort``); an abort that produced no new tokens still
-    emits a final event with an empty delta.
+    ``stop`` / ``abort`` / ``deadline`` / ``shed`` / ``failed``); an
+    abort — or a deadline expiry, or an admission-control rejection —
+    that produced no new tokens still emits a final event with an empty
+    delta, so every handle's stream terminates explicitly.
     """
     req_id: int
     new_token_ids: Tuple[int, ...]
@@ -141,8 +143,10 @@ class _EngineBackend:
 
     def enqueue(self, req: Request, now: float):
         # no routing decision to defer: the engine's own admission loop
-        # already waits for arrival_s
-        self.engine.add_request(req)
+        # already waits for arrival_s. Admission control may shed — the
+        # request then comes back already finished ("shed"), never an
+        # exception; with all shedding knobs off this is add_request
+        self.engine.try_add_request(req, now)
 
     def forget(self, req: Request):
         """Nothing request-scoped survives a finish in the engine."""
@@ -207,14 +211,7 @@ class _EngineBackend:
 
     def collect(self, requests: Sequence[Request],
                 wall: float) -> ServingMetrics:
-        eng = self.engine
-        return collect(list(requests), wall, eng.itl_samples,
-                       eng.max_kv_fraction, eng.batch_samples,
-                       kv_samples=eng.kv_fraction_samples,
-                       prefix=eng.prefix.stats if eng.prefix else None,
-                       stall_samples=eng.stall_samples,
-                       prefill_token_samples=eng.prefill_token_samples,
-                       decode_token_samples=eng.decode_token_samples)
+        return collect_from_engine(self.engine, requests, wall)
 
 
 class _ClusterBackend:
@@ -242,7 +239,9 @@ class _ClusterBackend:
 
     def enqueue(self, req: Request, now: float):
         if req.arrival_s <= now:
-            self.cluster.route_one(req)
+            # routed admission: may shed (request comes back finished
+            # "shed") or fail (no healthy replica) — never raises
+            self.cluster.route_one(req, now=now)
             return
         i = len(self.pending)
         while i > 0 and self.pending[i - 1].arrival_s > req.arrival_s:
@@ -251,14 +250,17 @@ class _ClusterBackend:
 
     def _dispatch_pending(self, now: float):
         while self.pending and self.pending[0].arrival_s <= now:
-            self.cluster.route_one(self.pending.pop(0))
+            self.cluster.route_one(self.pending.pop(0), now=now)
 
     def forget(self, req: Request):
         """Drop a released request from its replica's routed list (or the
-        unrouted-abort list) so the per-replica stats and retained memory
-        match the facade's registry."""
+        unrouted-abort / cluster-unserved lists) so the per-replica stats
+        and retained memory match the facade's registry."""
         if req in self.aborted_unrouted:
             self.aborted_unrouted.remove(req)
+            return
+        if req in self.cluster.unserved:
+            self.cluster.unserved.remove(req)
             return
         for rep in self.cluster.replicas:
             if req in rep.requests:
@@ -302,8 +304,17 @@ class _ClusterBackend:
                 rep.engine.clock = clock
         try:
             for rep in c.replicas:
-                if rep.engine.busy:
-                    rep.engine.step(now)
+                if rep.healthy and rep.engine.busy:
+                    try:
+                        c._step_replica(rep, now)
+                    except Exception as e:
+                        if not c.recover:
+                            raise
+                        # same recovery ladder as the run() loops:
+                        # quarantine + redrive onto survivors (handles
+                        # streamed through the facade keep their emitted
+                        # history; redriven decode regenerates it)
+                        c._handle_replica_failure(rep, e, now)
         finally:
             for rep, p in zip(c.replicas, prev):
                 rep.engine.clock = p

@@ -33,14 +33,49 @@ Two stepping modes:
   1-replica sync cluster is token-for-token identical to the bare engine
   — the equivalence test anchoring the whole subsystem. Chunked prefill
   (``EngineConfig.prefill_chunk_tokens``) keeps this property: chunk
-  selection is pure FCFS over request state, never the wall clock. (With *timed*
-  arrivals, dispatch rounds still follow the wall clock, so a load-aware
-  policy's choices can vary with real step durations.)
+  selection is pure FCFS over request state, never the wall clock. (With
+  *timed* arrivals, dispatch rounds still follow the wall clock, so a
+  load-aware policy's choices can vary with real step durations.)
 
 Per-replica isolation is structural: every engine owns its pool,
 allocator, slot map, and preemption counter (there is no module-level
 serving state), so one replica preempting under memory pressure cannot
 perturb another — ``tests/test_cluster.py`` pins this down.
+
+Fault tolerance (``recover=True``, the default): replication multiplies
+failure domains, so a replica death — injected through
+:class:`~repro.serving.faults.FaultInjector` or real — must cost only
+that replica's in-flight KV, never the run. The recovery ladder:
+
+* **Poison request** — :class:`~repro.serving.engine.RequestTooLarge`
+  (a single request that can never fit the pool) evicts *that request*
+  (``finish_reason="failed"``) and keeps the replica serving. This is
+  the degrade-don't-die floor: on a bare engine it stays a hard error.
+* **Replica death** — any other exception quarantines the replica
+  (``healthy=False``); its queued + in-flight requests are stranded
+  (KV lost), reset via the recompute-preemption path
+  (``reset_for_requeue``) and *redriven* through the router onto
+  survivors, where counter-based sampling regenerates bit-identical
+  outputs. Each request carries a ``max_redrives`` budget; exhausting it
+  finishes the request ``"failed"`` instead of ping-ponging a
+  crash-inducing request across the fleet. With ``respawn=True``,
+  co-located replicas are rebuilt from the dead engine's shared
+  :class:`~repro.serving.engine.StepFunctions` bundle (cheap: no
+  recompile) and rejoin routing.
+* **Wedge** — a replica whose step exceeds ``watchdog_s`` (or that has
+  not stepped within it, in threaded mode) is marked ``wedged``; new
+  arrivals route around it until a fast step self-heals it. Wedged is
+  advisory (the replica keeps its requests); quarantine requires death.
+* **Overload** — admission-time shedding (``route_one`` with a clock)
+  consults every eligible replica's
+  :meth:`~repro.serving.engine.ContinuousBatchingEngine.shed_check`;
+  only when *no* replica can take the request is it finished
+  ``"shed"`` — a graceful rejection, never an exception.
+
+``recover=False`` restores fail-fast semantics, but stops promptly: on a
+replica error the threaded feeder stops dispatching, signals every
+surviving loop via the stop event (no drain spin), stamps still-pending
+requests ``finish_reason="failed"``, and re-raises the replica's error.
 """
 from __future__ import annotations
 
@@ -56,9 +91,10 @@ from repro.serving.cluster.metrics import (ClusterMetrics, ReplicaStats,
                                            aggregate)
 from repro.serving.cluster.router import Router, RouterPolicy
 from repro.serving.engine import (ContinuousBatchingEngine, EngineConfig,
-                                  StepFunctions)
-from repro.serving.metrics import collect
-from repro.serving.workload import Request
+                                  RequestTooLarge, StepFunctions)
+from repro.serving.faults import FaultInjector
+from repro.serving.metrics import collect_from_engine
+from repro.serving.workload import FINISH_FAILED, FINISH_SHED, Request
 
 
 @dataclasses.dataclass
@@ -68,6 +104,15 @@ class Replica:
     engine: ContinuousBatchingEngine
     mesh: Optional[object] = None          # sub-mesh when spatially sliced
     requests: List[Request] = dataclasses.field(default_factory=list)
+
+    # --- fault-tolerance state (cluster-owned) ---
+    healthy: bool = True                   # quarantined replicas are skipped
+    wedged: bool = False                   # watchdog tripped; route around
+    faults: int = 0                        # failures observed (incl. poison)
+    error: Optional[BaseException] = None  # what killed it (kept for report)
+    failed_at: Optional[float] = None      # run-clock time of quarantine
+    downtime: float = 0.0                  # accumulated out-of-service time
+    last_step_at: Optional[float] = None   # time.monotonic() of step start
 
     # --- load view read by router policies (see cluster.router) ---
     @property
@@ -101,7 +146,12 @@ class ReplicatedCluster:
     def __init__(self, engines: Sequence[ContinuousBatchingEngine], *,
                  meshes: Optional[Sequence] = None,
                  policy: Union[str, RouterPolicy] = "round-robin",
-                 mode: str = "thread"):
+                 mode: str = "thread",
+                 faults: Optional[FaultInjector] = None,
+                 recover: bool = True,
+                 respawn: bool = False,
+                 max_redrives: int = 2,
+                 watchdog_s: Optional[float] = None):
         if not engines:
             raise ValueError("a cluster needs at least one engine")
         if mode not in self.MODES:
@@ -110,14 +160,43 @@ class ReplicatedCluster:
         if meshes is not None and len(meshes) != len(engines):
             raise ValueError(f"{len(meshes)} meshes for "
                              f"{len(engines)} engines")
+        if max_redrives < 0:
+            raise ValueError(f"max_redrives must be >= 0, got {max_redrives}")
+        if watchdog_s is not None and watchdog_s <= 0:
+            raise ValueError(f"watchdog_s must be > 0, got {watchdog_s}")
         self.replicas = [
             Replica(i, eng, meshes[i] if meshes is not None else None)
             for i, eng in enumerate(engines)]
         self.router = Router(policy, len(engines))
         self.mode = mode
+        self.faults = faults
+        self.recover = recover
+        self.respawn = respawn
+        self.max_redrives = max_redrives
+        self.watchdog_s = watchdog_s
+        for rep in self.replicas:
+            rep.engine.replica_id = rep.idx
+            if faults is not None:
+                rep.engine.faults = faults
         self.queue_samples: List[List[int]] = []
         self._feeding_done = False
         self._errors: List[BaseException] = []
+        # --- fault-tolerance bookkeeping ---
+        self.redriven = 0              # stranded requests re-admitted
+        self.lost = 0                  # finished "failed" (budget spent /
+        #                                no survivors / poison)
+        self.shed_count = 0            # cluster-admission rejections
+        self.shed_reasons: dict = {}
+        self.watchdog_trips = 0
+        # requests finished by the cluster itself (shed / failed) without
+        # ever being owned by a replica — folded into _collect
+        self.unserved: List[Request] = []
+        self._redrives: dict = {}      # req_id -> redrives consumed
+        self._stop = threading.Event()
+        self._failed: deque = deque()  # (Replica, exc) awaiting recovery
+        self._flock = threading.Lock()
+        self._threads: dict = {}       # replica idx -> current Thread
+        self._joinable: List[threading.Thread] = []
 
     # ---------------------------------------------------------- builders --
     @classmethod
@@ -156,21 +235,61 @@ class ReplicatedCluster:
         return len(self.replicas)
 
     def reset_stats(self):
-        """Clear telemetry and routed-request lists (e.g. after warmup)."""
+        """Clear telemetry and routed-request lists (e.g. after warmup).
+        Replica health survives — a quarantined replica stays dead unless
+        respawned; only the counters restart."""
         for rep in self.replicas:
             rep.engine.reset_stats()
             rep.requests = []
         self.router.reset()
         self.queue_samples = []
+        self.redriven = 0
+        self.lost = 0
+        self.shed_count = 0
+        self.shed_reasons = {}
+        self.watchdog_trips = 0
+        self.unserved = []
+        self._redrives = {}
 
     def _sample_queues(self):
         self.queue_samples.append([rep.queue_depth for rep in self.replicas])
 
-    def route_one(self, req: Request) -> Replica:
+    def eligible_replicas(self) -> List[Replica]:
+        """Replicas new work may be routed to: healthy and not wedged,
+        falling back to healthy-but-wedged when that's all that's left
+        (a slow replica beats a shed)."""
+        out = [r for r in self.replicas if r.healthy and not r.wedged]
+        return out or [r for r in self.replicas if r.healthy]
+
+    def route_one(self, req: Request,
+                  now: Optional[float] = None) -> Optional[Replica]:
         """Route a single request through the policy and hand it to its
-        replica — the one admission path both the batch ``run()`` loop
-        and the facade's ``submit()`` go through."""
-        rep = self.replicas[self.router.route(req, self.replicas)]
+        replica — the one admission path the batch ``run()`` loop, the
+        facade's ``submit()``, and failure redrives all go through.
+
+        With a clock (``now``), admission control runs: if *every*
+        eligible replica's :meth:`shed_check` rejects, the request is
+        finished ``"shed"`` and None is returned (graceful rejection —
+        overload never raises). Without a clock (redrives, legacy
+        callers) shedding is skipped to maximize completion. Returns
+        None — with the request finished ``"failed"`` — when no healthy
+        replica remains.
+        """
+        eligible = self.eligible_replicas()
+        if not eligible:
+            self._mark_failed(req, now if now is not None else 0.0)
+            return None
+        rep = eligible[self.router.route(req, eligible)]
+        if now is not None:
+            reason = rep.engine.shed_check(req, now)
+            if reason is not None:
+                # the routed pick is saturated; any other replica with
+                # headroom beats shedding (load shedding is a last resort)
+                rep = next((r for r in eligible if r is not rep
+                            and r.engine.shed_check(req, now) is None), None)
+                if rep is None:
+                    self._shed(req, now, reason)
+                    return None
         # enqueue before recording: add_request rejects over-length
         # prompts loudly, and a rejected request must not linger in the
         # replica's stats as a phantom routed-but-never-served entry
@@ -180,7 +299,133 @@ class ReplicatedCluster:
 
     def _dispatch(self, pending: deque, now: float):
         while pending and pending[0].arrival_s <= now:
-            self.route_one(pending.popleft())
+            self.route_one(pending.popleft(), now=now)
+
+    # ----------------------------------------------------- fault handling --
+    def _shed(self, req: Request, now: float, reason: str):
+        req.finish_reason = FINISH_SHED
+        req.t_done = max(now, req.arrival_s)
+        self.unserved.append(req)
+        self.shed_count += 1
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+
+    def _mark_failed(self, req: Request, now: float):
+        req.finish_reason = FINISH_FAILED
+        req.t_done = max(now, req.arrival_s)
+        self.unserved.append(req)
+        self.lost += 1
+
+    def _handle_replica_failure(self, rep: Replica, exc: Exception,
+                                now: float):
+        """The recovery ladder (see module docstring): poison requests
+        are evicted surgically; anything else quarantines the replica,
+        strands its requests (KV lost — recompute on survivors), and
+        redrives them through the router within the retry budget."""
+        rep.faults += 1
+        if isinstance(exc, RequestTooLarge):
+            # one hopeless request, healthy replica: evict it, keep serving
+            if rep.engine.evict_request(exc.req_id, now,
+                                        FINISH_FAILED) is not None:
+                self.lost += 1
+            return
+        rep.healthy = False
+        rep.wedged = False
+        rep.error = exc
+        rep.failed_at = now
+        eng = rep.engine
+        # strand in admission order (running were admitted first) so
+        # redrives keep FCFS service order on the survivors
+        stranded = (list(eng.running) + list(eng.prefilling)
+                    + list(eng.waiting))
+        eng.running.clear()
+        eng.prefilling.clear()
+        eng.waiting.clear()
+        eng._prefilled.clear()
+        for req in stranded:
+            if req in rep.requests:
+                rep.requests.remove(req)
+            # recompute-preemption path: forget in-flight output so
+            # re-admission regenerates it (bit-identical under the
+            # counter-based sampler)
+            req.state.reset_for_requeue()
+        if self.respawn:
+            self._respawn(rep, now)
+        for req in stranded:
+            n = self._redrives.get(req.req_id, 0)
+            if n >= self.max_redrives:
+                # a request that keeps killing replicas (or keeps landing
+                # on dying ones) burns its budget and fails alone
+                self._mark_failed(req, now)
+                continue
+            if not any(r.healthy for r in self.replicas):
+                self._mark_failed(req, now)
+                continue
+            self._redrives[req.req_id] = n + 1
+            if self.route_one(req) is not None:
+                self.redriven += 1
+
+    def _respawn(self, rep: Replica, now: float):
+        """Rebuild a dead co-located replica from its engine's shared
+        compiled :class:`StepFunctions` bundle — no recompile, fresh KV
+        pool/allocator/prefix cache — and return it to routing."""
+        old = rep.engine
+        with rep.mesh_ctx():
+            eng = ContinuousBatchingEngine(old.model, old.params, old.ecfg,
+                                           steps=old._steps)
+        eng.clock = old.clock
+        eng.faults = old.faults
+        eng.replica_id = old.replica_id
+        rep.engine = eng
+        rep.healthy = True
+        rep.error = None
+        if rep.failed_at is not None:
+            rep.downtime += max(0.0, now - rep.failed_at)
+            rep.failed_at = None
+
+    def _step_replica(self, rep: Replica, now: float) -> bool:
+        """One engine step with watchdog accounting: a step exceeding
+        ``watchdog_s`` marks the replica wedged (new arrivals route
+        around it); a fast step self-heals it. ``last_step_at`` is
+        stamped at step *start* so the threaded feeder can detect a
+        replica stuck inside a step."""
+        rep.last_step_at = time.monotonic()
+        busy = rep.engine.step(now)
+        if self.watchdog_s is not None:
+            if time.monotonic() - rep.last_step_at > self.watchdog_s:
+                if not rep.wedged:
+                    rep.wedged = True
+                    self.watchdog_trips += 1
+            elif rep.wedged:
+                rep.wedged = False
+        return busy
+
+    def _check_watchdog(self):
+        """Feeder-side wedge detection (threaded mode): a busy replica
+        that hasn't *started* a step within ``watchdog_s`` is stuck
+        inside one (or its thread is starved) — route around it."""
+        if self.watchdog_s is None:
+            return
+        wall = time.monotonic()
+        for rep in self.replicas:
+            if rep.healthy and not rep.wedged and rep.engine.busy \
+                    and rep.last_step_at is not None \
+                    and wall - rep.last_step_at > self.watchdog_s:
+                rep.wedged = True
+                self.watchdog_trips += 1
+
+    def _fail_stranded(self, pending: deque, now: float):
+        """Fail-fast path (``recover=False``): stamp every request that
+        will now never be served with an explicit terminal reason so
+        callers holding handles see ``"failed"``, not silence."""
+        while pending:
+            self._mark_failed(pending.popleft(), now)
+        for rep in self.replicas:
+            eng = rep.engine
+            for req in (list(eng.running) + list(eng.prefilling)
+                        + list(eng.waiting)):
+                req.finish_reason = FINISH_FAILED
+                req.t_done = max(now, req.arrival_s)
+                self.lost += 1
 
     # --------------------------------------------------------------- run --
     def run(self, requests: Sequence[Request]) -> ClusterMetrics:
@@ -221,72 +466,151 @@ class ReplicatedCluster:
         replica once per round. Idle gaps before the next arrival are
         fast-forwarded instead of slept through. Deterministic whenever
         every request is pending from t=0 (offline workloads); timed
-        arrivals are dispatched against the wall clock."""
+        arrivals are dispatched against the wall clock. Replica failures
+        are recovered inline (quarantine + redrive) when ``recover``."""
         now = 0.0
         while pending or any(r.engine.busy for r in self.replicas):
+            if not any(r.healthy for r in self.replicas):
+                # whole cluster down: everything still queued is lost
+                while pending:
+                    self._mark_failed(pending.popleft(), now)
+                break
             if pending and not any(r.engine.busy for r in self.replicas):
                 now = max(now, pending[0].arrival_s)
             self._dispatch(pending, now)
             for rep in self.replicas:
-                if rep.engine.busy:
-                    rep.engine.step(now)
+                if rep.healthy and rep.engine.busy:
+                    try:
+                        self._step_replica(rep, now)
+                    except Exception as e:
+                        if not self.recover:
+                            raise
+                        self._handle_replica_failure(rep, e, now)
             self._sample_queues()
             now = max(now, clock())     # monotonic across idle jumps
 
     def _run_threaded(self, pending: deque, clock: Callable[[], float]):
         """Thread-per-replica stepping; the main thread plays arrivals in
-        wall-clock time through the router."""
+        wall-clock time through the router, services replica failures
+        (quarantine + redrive happen on *this* thread — replica loops
+        never touch each other's engines), and runs the watchdog.
+
+        On an unrecoverable error the feeder stops dispatching
+        immediately, signals every surviving loop through the stop event
+        (no drain spin), stamps still-pending requests ``"failed"``, and
+        re-raises."""
         self._feeding_done = False
+        self._stop.clear()
         self._errors = []
-        threads = [threading.Thread(target=self._replica_loop, args=(rep,),
-                                    name=f"replica-{rep.idx}", daemon=True)
-                   for rep in self.replicas]
-        for t in threads:
-            t.start()
+        self._failed.clear()
+        self._threads = {}
+        self._joinable = []
+        for rep in self.replicas:
+            if rep.healthy:
+                self._start_thread(rep)
         try:
-            while pending and not self._errors:
+            while True:
                 now = clock()
-                if pending[0].arrival_s > now:
-                    time.sleep(min(pending[0].arrival_s - now, 0.005))
-                else:
-                    self._dispatch(pending, now)
+                self._service_failures(now)
+                self._check_watchdog()
+                if self._errors:
+                    break
+                if pending:
+                    if not any(r.healthy for r in self.replicas):
+                        while pending:
+                            self._mark_failed(pending.popleft(), now)
+                    elif pending[0].arrival_s > now:
+                        time.sleep(min(pending[0].arrival_s - now, 0.005))
+                    else:
+                        self._dispatch(pending, now)
                 self._sample_queues()
+                if not pending:
+                    self._feeding_done = True
+                    if all(not t.is_alive()
+                           for t in self._threads.values()):
+                        # late failures may still be queued; servicing
+                        # them can redrive work and restart threads
+                        self._service_failures(clock())
+                        if not self._failed and \
+                                all(not t.is_alive()
+                                    for t in self._threads.values()):
+                            break
+                    time.sleep(0.001)
         finally:
             self._feeding_done = True
-            while any(t.is_alive() for t in threads):   # drain phase
-                self._sample_queues()
-                time.sleep(0.01)
-            for t in threads:
+            self._stop.set()
+            for t in self._joinable:
                 t.join()
         if self._errors:
+            self._fail_stranded(pending, clock())
             raise self._errors[0]
+
+    def _start_thread(self, rep: Replica):
+        t = threading.Thread(target=self._replica_loop, args=(rep,),
+                             name=f"replica-{rep.idx}", daemon=True)
+        self._threads[rep.idx] = t
+        self._joinable.append(t)
+        t.start()
+
+    def _ensure_thread(self, rep: Replica):
+        t = self._threads.get(rep.idx)
+        if t is None or not t.is_alive():
+            self._start_thread(rep)
+
+    def _service_failures(self, now: float):
+        """Drain the failure queue (filled by dying replica loops) and
+        recover each on the feeder thread; redrives may target replicas
+        whose loops already exited idle, and a respawned (or
+        poison-evicted) replica needs its loop back — restart those."""
+        serviced = False
+        while True:
+            with self._flock:
+                if not self._failed:
+                    break
+                rep, exc = self._failed.popleft()
+            serviced = True
+            self._handle_replica_failure(rep, exc, now)
+        if serviced and not self._stop.is_set():
+            for rep in self.replicas:
+                if rep.healthy and rep.engine.busy:
+                    self._ensure_thread(rep)
 
     def _replica_loop(self, rep: Replica):
         clock = rep.engine.clock
         try:
             with rep.mesh_ctx():
-                while True:
-                    busy = rep.engine.step(clock())
+                while not self._stop.is_set():
+                    busy = self._step_replica(rep, clock())
                     if not busy:
                         if self._feeding_done and not rep.engine.busy:
                             return
                         time.sleep(0.001)
-        except BaseException as e:          # surface replica crashes
+        except Exception as e:
+            if self.recover:
+                # hand off to the feeder thread — recovery must never
+                # mutate other replicas from a dying loop
+                with self._flock:
+                    self._failed.append((rep, e))
+            else:
+                self._errors.append(e)
+        except BaseException as e:          # KeyboardInterrupt etc.
             self._errors.append(e)
 
     # ----------------------------------------------------------- metrics --
+    def _availability(self, rep: Replica, wall: float) -> float:
+        down = rep.downtime
+        if rep.failed_at is not None:
+            down += max(0.0, wall - rep.failed_at)
+        if wall <= 0:
+            return 1.0 if rep.healthy else 0.0
+        return max(0.0, 1.0 - down / wall)
+
     def _collect(self, requests: Sequence[Request],
                  wall: float) -> ClusterMetrics:
         per_replica, itl_all = [], []
         for rep in self.replicas:
             eng = rep.engine
-            m = collect(rep.requests, wall, eng.itl_samples,
-                        eng.max_kv_fraction, eng.batch_samples,
-                        kv_samples=eng.kv_fraction_samples,
-                        prefix=eng.prefix.stats if eng.prefix else None,
-                        stall_samples=eng.stall_samples,
-                        prefill_token_samples=eng.prefill_token_samples,
-                        decode_token_samples=eng.decode_token_samples)
+            m = collect_from_engine(eng, rep.requests, wall)
             busy = sum(eng.itl_samples) / max(wall, 1e-9)
             qmax = max((q[rep.idx] for q in self.queue_samples), default=0)
             per_replica.append(ReplicaStats(
@@ -294,14 +618,30 @@ class ReplicatedCluster:
                 completed=m.n_completed, preemptions=eng.preemptions,
                 busy_fraction=busy,
                 occupancy=m.avg_batch / eng.ecfg.max_batch,
-                max_queue_depth=qmax, metrics=m))
+                max_queue_depth=qmax, metrics=m,
+                healthy=rep.healthy, faults=rep.faults,
+                availability=self._availability(rep, wall)))
             itl_all.extend(eng.itl_samples)
-        done = [r for r in requests if r.t_done is not None]
-        return aggregate(
+        # latency percentiles cover *served* requests only: shed/failed
+        # requests finish at ~0 E2E and would drag the tails down
+        done = [r for r in requests if r.t_done is not None
+                and r.finish_reason not in (FINISH_SHED, FINISH_FAILED)]
+        metrics = aggregate(
             per_replica, wall_s=wall, policy=self.router.policy.name,
             mode=self.mode,
             ttft_samples=[r.t_first_token - r.arrival_s for r in done
                           if r.t_first_token is not None],
             itl_samples=itl_all,
             e2e_samples=[r.t_done - r.arrival_s for r in done],
-            queue_samples=self.queue_samples)
+            queue_samples=self.queue_samples,
+            redriven=self.redriven, lost=self.lost, shed=self.shed_count,
+            watchdog_trips=self.watchdog_trips)
+        # requests the cluster finished without any replica owning them
+        # (shed at admission, failed with no survivors) still count
+        ids = {id(r) for r in requests}
+        for r in self.unserved:
+            if id(r) in ids:
+                metrics.completed += 1
+                metrics.finish_reasons[r.finish_reason] = \
+                    metrics.finish_reasons.get(r.finish_reason, 0) + 1
+        return metrics

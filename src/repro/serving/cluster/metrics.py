@@ -29,9 +29,18 @@ class ReplicaStats:
     occupancy: float             # avg running batch / max_batch
     max_queue_depth: int
     metrics: ServingMetrics
+    # --- fault tolerance ---
+    healthy: bool = True         # still serving at collection time
+    faults: int = 0              # failures observed on this replica
+    # fraction of the run this replica was in service (1.0 = never
+    # failed; a replica quarantined at t and never respawned scores
+    # t / wall; a respawned one loses only its downtime)
+    availability: float = 1.0
 
     def row(self) -> str:
-        return (f"replica {self.replica}: reqs={self.n_requests} "
+        health = "" if self.healthy else \
+            f" DOWN(avail={self.availability*100:.0f}%)"
+        return (f"replica {self.replica}:{health} reqs={self.n_requests} "
                 f"busy={self.busy_fraction*100:.0f}% "
                 f"occ={self.occupancy*100:.0f}% "
                 f"preempt={self.preemptions} "
@@ -62,8 +71,18 @@ class ClusterMetrics:
     prefill_tokens_skipped: int = 0
     prefix_blocks_shared: int = 0
     # finish-reason breakdown summed across replicas ({"length": n,
-    # "stop": n, "abort": n})
+    # "stop": n, "abort": n, "deadline": n, "shed": n, "failed": n})
     finish_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # --- fault tolerance / robustness ---
+    faults: int = 0              # replica failures observed (injected or real)
+    redriven: int = 0            # stranded requests re-admitted on survivors
+    lost: int = 0                # requests finished "failed" (redrives spent)
+    shed: int = 0                # rejected by admission control
+    deadline_expired: int = 0    # finished "deadline" across replicas
+    queued_aborts: int = 0       # aborts caught in arrival queues
+    watchdog_trips: int = 0      # wedged-replica detections
+    # mean per-replica availability (1.0 = no replica ever failed)
+    availability: float = 1.0
 
     @property
     def throughput(self) -> float:
@@ -109,6 +128,14 @@ class ClusterMetrics:
             lines.append("  finish: " + " ".join(
                 f"{k}={self.finish_reasons.get(k, 0)}"
                 for k in FINISH_REASONS))
+        if self.faults or self.shed or self.deadline_expired \
+                or self.watchdog_trips:
+            lines.append(
+                f"  faults: {self.faults} redriven={self.redriven} "
+                f"lost={self.lost} shed={self.shed} "
+                f"deadline={self.deadline_expired} "
+                f"watchdog={self.watchdog_trips} "
+                f"avail={self.availability*100:.1f}%")
         lines += [f"  {r.row()}" for r in self.per_replica]
         return "\n".join(lines)
 
@@ -116,7 +143,9 @@ class ClusterMetrics:
 def aggregate(per_replica: List[ReplicaStats], *, wall_s: float, policy: str,
               mode: str, ttft_samples: Sequence[float],
               itl_samples: Sequence[float], e2e_samples: Sequence[float],
-              queue_samples: Sequence[Sequence[int]]) -> ClusterMetrics:
+              queue_samples: Sequence[Sequence[int]],
+              redriven: int = 0, lost: int = 0, shed: int = 0,
+              watchdog_trips: int = 0) -> ClusterMetrics:
     """Fold per-replica stats + pooled latency samples into one view."""
     depth = np.asarray([sum(q) for q in queue_samples], float) \
         if queue_samples else np.zeros(0)
@@ -151,4 +180,15 @@ def aggregate(per_replica: List[ReplicaStats], *, wall_s: float, policy: str,
         prefix_hit_rate=hit_toks / prompt_toks if prompt_toks else 0.0,
         prefill_tokens_skipped=hit_toks,
         prefix_blocks_shared=sum(p.blocks_shared for p in pfx),
-        finish_reasons=finish)
+        finish_reasons=finish,
+        faults=sum(r.faults for r in per_replica),
+        redriven=redriven,
+        lost=lost,
+        # cluster-level sheds (routed admission) + any engine-level ones
+        shed=shed + sum(r.metrics.shed for r in per_replica),
+        deadline_expired=sum(r.metrics.deadline_expired
+                             for r in per_replica),
+        queued_aborts=sum(r.metrics.queued_aborts for r in per_replica),
+        watchdog_trips=watchdog_trips,
+        availability=(float(np.mean([r.availability for r in per_replica]))
+                      if per_replica else 1.0))

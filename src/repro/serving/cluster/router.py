@@ -152,7 +152,11 @@ class Router:
             raise IndexError(
                 f"policy {self.policy.name!r} chose replica {idx} "
                 f"of {len(replicas)}")
-        self.assigned[idx] += 1
+        # the cluster may pass a filtered (eligible-only) view, so credit
+        # the replica's own slot, not its position in the passed list
+        slot = getattr(replicas[idx], "idx", idx)
+        if 0 <= slot < len(self.assigned):
+            self.assigned[slot] += 1
         return idx
 
     def reset(self):

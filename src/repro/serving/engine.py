@@ -103,9 +103,29 @@ from repro.kvcache.view import PagedCacheView
 from repro.models.model import Model
 from repro.models.sampler import (positions_array, sample_tokens,
                                   stack_sampling)
+from repro.serving.faults import FaultInjector
 from repro.serving.metrics import ServingMetrics
-from repro.serving.workload import (FINISH_ABORT, FINISH_LENGTH,
-                                    FINISH_STOP, Request)
+from repro.serving.workload import (FINISH_ABORT, FINISH_DEADLINE,
+                                    FINISH_FAILED, FINISH_LENGTH,
+                                    FINISH_SHED, FINISH_STOP, Request)
+
+
+class RequestTooLarge(RuntimeError):
+    """A single request can never fit the KV pool (prompt or decode
+    footprint exceeds capacity even with everything else evicted).
+
+    Subclasses ``RuntimeError`` with the legacy "KV pool exhausted"
+    message, so bare-engine callers see the same hard error as before —
+    but carries ``req_id`` so the cluster can *evict that one request*
+    (finish it ``failed``) and keep the replica serving instead of
+    treating a poison request as a replica death. The lone oversized
+    request is the only pool-exhaustion condition that stays a hard
+    error; every other one degrades (preemption, shedding, deadlines).
+    """
+
+    def __init__(self, msg: str, req_id: int):
+        super().__init__(msg)
+        self.req_id = req_id
 
 
 @dataclasses.dataclass
@@ -131,6 +151,21 @@ class EngineConfig:
     # None = serial admission-time prefill (the HOL-blocking legacy mode,
     # kept as the baseline for benchmarks/chunked_prefill.py).
     prefill_chunk_tokens: Optional[int] = None
+    # --- admission control / load shedding (all off by default) ---
+    # bound on the arrival queue: shed_check rejects a submit once this
+    # many requests are already waiting (reason "queue_full")
+    max_waiting: Optional[int] = None
+    # refuse new submits while the KV pool is fuller than this fraction
+    # AND requests are already queued behind it (reason "kv_pressure") —
+    # occupancy-driven backpressure, the degrade-don't-die alternative
+    # to queueing into a pool that preemption is already thrashing
+    shed_kv_fraction: Optional[float] = None
+    # refuse new submits once the estimated queue delay (queued tokens
+    # over the recent measured token throughput) exceeds this bound
+    # (reason "queue_delay"); a submit whose own deadline the estimate
+    # already blows is shed as "deadline_unmeetable" even without a
+    # global bound
+    shed_queue_delay_s: Optional[float] = None
 
     def __post_init__(self):
         """Fail loudly at construction instead of as a downstream shape
@@ -172,6 +207,20 @@ class EngineConfig:
             raise ValueError(
                 f"prefill_chunk_tokens must be >= 1 (or None for serial "
                 f"admission-time prefill), got {self.prefill_chunk_tokens}")
+        if self.max_waiting is not None and self.max_waiting < 1:
+            raise ValueError(
+                f"max_waiting must be >= 1 (or None for an unbounded "
+                f"queue), got {self.max_waiting}")
+        if self.shed_kv_fraction is not None \
+                and not 0.0 < self.shed_kv_fraction <= 1.0:
+            raise ValueError(
+                f"shed_kv_fraction must be in (0, 1] (or None to "
+                f"disable), got {self.shed_kv_fraction}")
+        if self.shed_queue_delay_s is not None \
+                and self.shed_queue_delay_s <= 0:
+            raise ValueError(
+                f"shed_queue_delay_s must be > 0 (or None to disable), "
+                f"got {self.shed_queue_delay_s}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,6 +347,15 @@ class ContinuousBatchingEngine:
         # run() installs one, a cluster driving step() directly installs a
         # shared cluster-wide clock so replica timelines are comparable
         self.clock: Optional[Callable[[], float]] = None
+        # fault injection (serving.faults): the cluster installs one
+        # injector + this engine's replica id; a bare engine may set them
+        # directly. None = no injection hooks consulted.
+        self.faults: Optional[FaultInjector] = None
+        self.replica_id = 0
+        self.step_count = 0          # step() calls, counted from 1
+        # deadlines are only scanned for when at least one admitted
+        # request carries one (keeps the fault-free hot loop unchanged)
+        self._has_deadlines = False
         # telemetry
         self.itl_samples: List[float] = []
         self.batch_samples: List[int] = []
@@ -312,6 +370,15 @@ class ContinuousBatchingEngine:
         self.stall_samples: List[float] = []
         self.prefill_token_samples: List[int] = []
         self.decode_token_samples: List[int] = []
+        # per-step recompute re-admissions (preemptions delta): recovery
+        # redrives ride the preemption path, so this series is how a
+        # thrashing pool — or a redrive storm — becomes visible
+        self.preemption_samples: List[int] = []
+        # robustness counters (also broken down in finish_reasons)
+        self.deadline_expired = 0
+        self.shed = 0
+        self.shed_reasons: Dict[str, int] = {}
+        self.queued_aborts = 0       # aborts caught in the arrival queue
 
     # ------------------------------------------------------------- admin --
     @property
@@ -329,7 +396,78 @@ class ContinuousBatchingEngine:
                 f"first output token exceeds max_model_len "
                 f"({self.ecfg.max_model_len}); reject or truncate the "
                 f"prompt upstream")
+        if req.sampling.has_deadline:
+            self._has_deadlines = True
         self.waiting.append(req)
+
+    # ----------------------------------------------- admission control --
+    def estimated_queue_delay_s(self) -> float:
+        """Rough wait estimate for a newly queued request: tokens already
+        committed ahead of it (queued prompts + their output budgets)
+        over the recently measured token throughput. Zero until the
+        engine has decode samples to estimate from — admission control
+        never sheds on a cold start."""
+        itl = self.itl_samples[-32:]
+        toks = self.decode_token_samples[-32:]
+        if not itl or not sum(toks):
+            return 0.0
+        tok_per_s = sum(toks) / max(sum(itl), 1e-9)
+        ahead = sum(r.prompt_len + r.sampling.max_new_tokens
+                    for r in self.waiting)
+        return ahead / tok_per_s
+
+    def shed_check(self, req: Request, now: float) -> Optional[str]:
+        """Would admission control reject ``req`` submitted at ``now``?
+
+        Returns the shed reason (``queue_full`` / ``kv_pressure`` /
+        ``queue_delay`` / ``deadline_unmeetable``) or None to accept.
+        Pure — the caller decides whether to actually shed (see
+        :meth:`try_add_request` and the cluster's routed admission).
+        All policies default off; an engine with no shedding knobs and
+        no deadlines accepts everything, exactly as before.
+        """
+        ecfg = self.ecfg
+        if ecfg.max_waiting is not None \
+                and len(self.waiting) >= ecfg.max_waiting:
+            return "queue_full"
+        if ecfg.shed_kv_fraction is not None and self.waiting \
+                and self.pool.manager.used_fraction >= ecfg.shed_kv_fraction:
+            return "kv_pressure"
+        if ecfg.shed_queue_delay_s is not None or req.sampling.has_deadline:
+            est = self.estimated_queue_delay_s()
+            if ecfg.shed_queue_delay_s is not None \
+                    and est > ecfg.shed_queue_delay_s:
+                return "queue_delay"
+            # a request whose queue wait alone already blows its own
+            # deadline would only be admitted to expire — reject now so
+            # the caller can fail fast / try elsewhere
+            dl = req.sampling.ttft_deadline_s
+            if dl is None:
+                dl = req.sampling.deadline_s
+            if dl is not None and max(now, req.arrival_s) + est \
+                    > req.arrival_s + dl:
+                return "deadline_unmeetable"
+        return None
+
+    def shed_request(self, req: Request, now: float, reason: str):
+        """Stamp a rejected request (it never entered any queue): KV-free
+        by construction, finished with ``finish_reason="shed"``."""
+        req.state.finish_reason = FINISH_SHED
+        req.state.t_done = max(now, req.arrival_s)
+        self.shed += 1
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+
+    def try_add_request(self, req: Request, now: float) -> Optional[str]:
+        """Admission-controlled enqueue: shed (returning the reason) or
+        accept (returning None). The graceful path ``ServingAPI.submit``
+        uses — an overloaded engine degrades by rejecting work, it never
+        crashes on it."""
+        reason = self.shed_check(req, now)
+        if reason is not None:
+            self.shed_request(req, now, reason)
+            return reason
+        self.add_request(req)
+        return None
 
     def reset_stats(self):
         """Clear accumulated telemetry (e.g. after a warmup workload) so
@@ -345,6 +483,11 @@ class ContinuousBatchingEngine:
         self.stall_samples = []
         self.prefill_token_samples = []
         self.decode_token_samples = []
+        self.preemption_samples = []
+        self.deadline_expired = 0
+        self.shed = 0
+        self.shed_reasons = {}
+        self.queued_aborts = 0
         self.pool.manager.total_allocations = 0
         self.pool.manager.cow_copies = 0
         if self.prefix is not None:
@@ -416,7 +559,11 @@ class ContinuousBatchingEngine:
         """
         req = next((r for r in self.waiting if r.req_id == req_id), None)
         if req is not None:
+            # still in the arrival queue: nothing allocated to reclaim,
+            # it just must never start — counted separately so queue
+            # churn (clients hanging up before service) is visible
             self.waiting.remove(req)
+            self.queued_aborts += 1
         else:
             for lst in (self.prefilling, self.running):
                 req = next((r for r in lst if r.req_id == req_id), None)
@@ -432,8 +579,51 @@ class ContinuousBatchingEngine:
                      reason=FINISH_ABORT)
         return True
 
+    def evict_request(self, req_id: int, now: float = 0.0,
+                      reason: str = FINISH_FAILED) -> Optional[Request]:
+        """Force-finish one request with an explicit reason, releasing
+        its KV blocks — the cluster's surgical response to a
+        :class:`RequestTooLarge` poison request (the request dies, the
+        replica keeps serving everyone else). Same phase coverage and
+        block accounting as :meth:`abort`, but the reason is the
+        caller's and queued evictions are not counted as client aborts.
+        Returns the request, or None if unknown / already finished."""
+        for lst in (self.waiting, self.prefilling, self.running):
+            req = next((r for r in lst if r.req_id == req_id), None)
+            if req is not None:
+                lst.remove(req)
+                self._prefilled.pop(req_id, None)
+                self._finish(req, max(self._now(now), req.arrival_s),
+                             reason=reason)
+                return req
+        return None
+
+    def _expire_deadlines(self, now: float):
+        """Finish every request past its SLO, whichever phase it is in:
+        queued (never starts), PREFILLING (partial prompt KV released),
+        or decoding (partial output kept, blocks + prefix-cache pins
+        released this same step — the abort/reclaim path). Gated on
+        ``_has_deadlines`` so deadline-free serving pays nothing."""
+        if not self._has_deadlines:
+            return
+        for lst in (self.waiting, self.prefilling, self.running):
+            expired = [r for r in lst if r.sampling.expired(
+                r.arrival_s, now,
+                first_token=r.state.t_first_token is not None)]
+            for req in expired:
+                lst.remove(req)
+                self._prefilled.pop(req.req_id, None)
+                self._finish(req, max(now, req.arrival_s),
+                             reason=FINISH_DEADLINE)
+                self.deadline_expired += 1
+
     def _admit(self, now: float):
         mgr = self.pool.manager
+        if self.faults is not None and self.faults.steals_allocation(
+                self.replica_id, self.step_count):
+            # injected transient allocation failure: admission skips a
+            # step (requests wait, shed, or expire — never a crash)
+            return
         while (self.waiting
                and len(self.running) + len(self.prefilling)
                < self.ecfg.max_batch
@@ -480,13 +670,14 @@ class ContinuousBatchingEngine:
                                  if self.prefix is not None else 0)
                     if (mgr.free_blocks + evictable - need_new
                             < mgr.watermark_blocks):
-                        raise RuntimeError(
+                        raise RequestTooLarge(
                             f"KV pool exhausted: request {req.req_id} "
                             f"(prompt_len={req.prompt_len}) needs "
                             f"{need_new} blocks but the idle pool has "
                             f"{mgr.free_blocks} free ({mgr.num_blocks} "
                             f"total, {mgr.watermark_blocks} reserved) — "
-                            f"raise kv_pool_tokens or lower max_model_len")
+                            f"raise kv_pool_tokens or lower max_model_len",
+                            req.req_id)
                     self.prefix.evict(need_new + mgr.watermark_blocks
                                       - mgr.free_blocks)
                     continue                # retry the same head request
@@ -636,10 +827,10 @@ class ContinuousBatchingEngine:
                 return False             # decode completions free blocks
             victims = [r for r in self.prefilling if r.req_id != rid]
             if not victims:
-                raise RuntimeError(
+                raise RequestTooLarge(
                     "KV pool exhausted: a single request's prompt exceeds "
                     "pool capacity (raise kv_pool_tokens or lower "
-                    "max_model_len)")
+                    "max_model_len)", rid)
             self._preempt(victims[-1])
 
     def _run_chunk(self, req: Request, done: int, chunk: int):
@@ -725,9 +916,10 @@ class ContinuousBatchingEngine:
                 self._preempt(self.prefilling[-1])
                 continue
             if len(self.running) <= 1:
-                raise RuntimeError(
+                raise RequestTooLarge(
                     "KV pool exhausted: a single request exceeds pool "
-                    "capacity (raise kv_pool_tokens or lower max_model_len)")
+                    "capacity (raise kv_pool_tokens or lower max_model_len)",
+                    self.running[0].req_id)
             self._preempt(self.running.pop())
 
     # -------------------------------------------------------------- step --
@@ -742,8 +934,17 @@ class ContinuousBatchingEngine:
         ``_admit``); the prefill share of each step is also recorded
         separately in ``stall_samples``.
         """
+        self.step_count += 1
+        if self.faults is not None:
+            # may sleep (delay — the watchdog's trigger) or raise
+            # InjectedFault (kill — the cluster's quarantine trigger);
+            # raised before any mutation, so host bookkeeping stays
+            # consistent (the KV is treated as lost either way)
+            self.faults.on_step(self.replica_id, self.step_count)
         t0 = time.perf_counter()
         pf0 = self.prefill_tokens_computed
+        p0 = self.preemptions
+        self._expire_deadlines(now)
         self._admit(now)
         self._prefill_step(now)
         n_prefill = self.prefill_tokens_computed - pf0
@@ -753,6 +954,7 @@ class ContinuousBatchingEngine:
                 self.stall_samples.append(t_sched)
                 self.prefill_token_samples.append(n_prefill)
                 self.decode_token_samples.append(0)
+                self.preemption_samples.append(self.preemptions - p0)
                 # KV streamed in without a decode step to sample it
                 self.kv_fraction_samples.append(
                     self.pool.manager.used_fraction)
@@ -780,6 +982,7 @@ class ContinuousBatchingEngine:
         self.stall_samples.append(t_sched)
         self.prefill_token_samples.append(n_prefill)
         self.decode_token_samples.append(len(reqs))
+        self.preemption_samples.append(self.preemptions - p0)
         self.batch_samples.append(len(reqs))
         self.kv_fraction_samples.append(self.pool.manager.used_fraction)
         self.max_kv_fraction = max(self.max_kv_fraction,

@@ -68,10 +68,23 @@ class ServingMetrics:
     prefill_tokens_per_step: float = 0.0     # mean computed prompt tokens
     decode_tokens_per_step: float = 0.0      # mean decoded tokens
     # how the completed requests ended: {"length": n, "stop": n,
-    # "abort": n} (stop-token finishes release blocks the same step and
-    # are accounted identically to length finishes; this breakdown is the
-    # only place they differ)
+    # "abort": n, "deadline": n, "shed": n, "failed": n} (stop-token
+    # finishes release blocks the same step and are accounted identically
+    # to length finishes; this breakdown is the only place they differ)
     finish_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # --- robustness series ---
+    # recompute re-admissions: total, plus the per-step delta series
+    # (recovery redrives and pool thrash both ride this path)
+    preemptions: int = 0
+    preemption_series: List[int] = dataclasses.field(default_factory=list)
+    # requests rejected by admission control, with the per-policy
+    # breakdown ({"queue_full": n, "kv_pressure": n, ...})
+    shed: int = 0
+    shed_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # requests finished by deadline expiry (any phase)
+    deadline_expired: int = 0
+    # aborts that caught the request still in the arrival queue
+    queued_aborts: int = 0
 
     @property
     def throughput(self) -> float:
@@ -103,6 +116,11 @@ class ServingMetrics:
                  for k in FINISH_REASONS]
         return "finish: " + " ".join(parts)
 
+    def robustness_row(self) -> str:
+        return (f"preempt={self.preemptions} shed={self.shed} "
+                f"deadline={self.deadline_expired} "
+                f"q_abort={self.queued_aborts}")
+
 
 def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
             max_kv_fraction: float, batch_samples: List[int],
@@ -110,8 +128,13 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
             prefix: Optional[PrefixStats] = None,
             stall_samples: Optional[Sequence[float]] = None,
             prefill_token_samples: Optional[Sequence[int]] = None,
-            decode_token_samples: Optional[Sequence[int]] = None
-            ) -> ServingMetrics:
+            decode_token_samples: Optional[Sequence[int]] = None,
+            preemptions: int = 0,
+            preemption_samples: Optional[Sequence[int]] = None,
+            shed: int = 0,
+            shed_reasons: Optional[Dict[str, int]] = None,
+            deadline_expired: int = 0,
+            queued_aborts: int = 0) -> ServingMetrics:
     done = [r for r in requests if r.t_done is not None]
     total_in = sum(r.prompt_len for r in done)
     total_out = sum(r.generated for r in done)
@@ -148,4 +171,31 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
                                  if prefill_token_samples else 0.0),
         decode_tokens_per_step=(float(np.mean(decode_token_samples))
                                 if decode_token_samples else 0.0),
-        finish_reasons=finish)
+        finish_reasons=finish,
+        preemptions=preemptions,
+        preemption_series=list(preemption_samples or []),
+        shed=shed,
+        shed_reasons=dict(shed_reasons or {}),
+        deadline_expired=deadline_expired,
+        queued_aborts=queued_aborts)
+
+
+def collect_from_engine(eng, requests: List[Request],
+                        wall_s: float) -> ServingMetrics:
+    """:func:`collect` with every series pulled off a
+    :class:`~repro.serving.engine.ContinuousBatchingEngine` (duck-typed
+    to keep this module import-light) — the one place the engine's
+    telemetry attribute list is spelled out, shared by the API facade
+    and the cluster's per-replica aggregation."""
+    return collect(list(requests), wall_s, eng.itl_samples,
+                   eng.max_kv_fraction, eng.batch_samples,
+                   kv_samples=eng.kv_fraction_samples,
+                   prefix=eng.prefix.stats if eng.prefix else None,
+                   stall_samples=eng.stall_samples,
+                   prefill_token_samples=eng.prefill_token_samples,
+                   decode_token_samples=eng.decode_token_samples,
+                   preemptions=eng.preemptions,
+                   preemption_samples=eng.preemption_samples,
+                   shed=eng.shed, shed_reasons=eng.shed_reasons,
+                   deadline_expired=eng.deadline_expired,
+                   queued_aborts=eng.queued_aborts)

@@ -48,7 +48,11 @@ ARRIVAL_PATTERNS = ("poisson", "burst", "ramp")
 FINISH_LENGTH = "length"     # hit max_new_tokens / model-length budget
 FINISH_STOP = "stop"         # sampled a stop/EOS token
 FINISH_ABORT = "abort"       # cancelled via the API (blocks reclaimed)
-FINISH_REASONS = (FINISH_LENGTH, FINISH_STOP, FINISH_ABORT)
+FINISH_DEADLINE = "deadline"  # missed its deadline_s/ttft_deadline_s SLO
+FINISH_SHED = "shed"         # rejected by admission control (backpressure)
+FINISH_FAILED = "failed"     # lost to a replica failure (redrives exhausted)
+FINISH_REASONS = (FINISH_LENGTH, FINISH_STOP, FINISH_ABORT,
+                  FINISH_DEADLINE, FINISH_SHED, FINISH_FAILED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +72,16 @@ class SamplingParams:
     this repo): sampling one of them finishes the request the same step
     with ``finish_reason="stop"`` — unless ``ignore_eos`` is set, which
     decodes through stop tokens to the length budget (benchmark mode).
+
+    The deadline fields are QoS riders (they never touch token
+    selection): ``deadline_s`` bounds the whole request — the engine
+    finishes it with ``finish_reason="deadline"`` (partial output kept,
+    KV released the same step) once the serving clock passes
+    ``arrival_s + deadline_s``, whether it is still queued, mid-prefill,
+    or mid-decode. ``ttft_deadline_s`` bounds only the time to the first
+    token: a request that has not completed prefill by
+    ``arrival_s + ttft_deadline_s`` expires the same way (it is moot
+    once the first token exists). Both default to None (no deadline).
     """
     temperature: float = 0.0
     top_k: int = 0               # 0 = disabled (full vocabulary)
@@ -76,6 +90,8 @@ class SamplingParams:
     max_new_tokens: int = 16
     stop_token_ids: Tuple[int, ...] = ()
     ignore_eos: bool = False
+    deadline_s: Optional[float] = None       # E2E SLO, relative to arrival
+    ttft_deadline_s: Optional[float] = None  # first-token SLO
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -90,6 +106,11 @@ class SamplingParams:
         if self.max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, "
                              f"got {self.max_new_tokens}")
+        for name in ("deadline_s", "ttft_deadline_s"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be > 0 (or None for no "
+                                 f"deadline), got {v}")
         # normalize the seed into the PRNG key domain: any Python int is
         # accepted (CLI flags pass negatives freely) and wraps mod 2**32
         # deterministically — NumPy 2 would otherwise raise OverflowError
@@ -102,6 +123,26 @@ class SamplingParams:
     @property
     def greedy(self) -> bool:
         return self.temperature <= 0.0
+
+    @property
+    def has_deadline(self) -> bool:
+        return self.deadline_s is not None or self.ttft_deadline_s is not None
+
+    def expired(self, arrival_s: float, now: float, *,
+                first_token: bool) -> bool:
+        """Is the request past its SLO at serving time ``now``?
+
+        ``first_token`` = has prefill already produced the first output
+        token (which retires the TTFT deadline; the E2E one keeps
+        running). Deadlines are half-open: ``now`` strictly past the
+        bound expires, landing exactly on it does not.
+        """
+        if self.deadline_s is not None \
+                and now > arrival_s + self.deadline_s:
+            return True
+        return (not first_token
+                and self.ttft_deadline_s is not None
+                and now > arrival_s + self.ttft_deadline_s)
 
     def stops_on(self, token: int) -> bool:
         """Does sampling ``token`` finish the request with reason "stop"?"""

@@ -1,0 +1,335 @@
+"""Request deadlines + admission-control backpressure.
+
+Deadline expiry must work in every phase — queued (pre-admission),
+mid-PREFILLING (chunked), mid-decode, and via the streaming facade
+across replicas — releasing KV blocks and prefix-cache pins the same
+step. Load shedding must be a graceful finish ("shed"), never an engine
+exception, with a per-reason breakdown; preemptions and queued aborts
+are first-class metrics series."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model, init_params
+from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                           ReplicatedCluster, Request, SamplingParams,
+                           ServingAPI, StepFunctions, sharegpt_like)
+from repro.serving.workload import (FINISH_ABORT, FINISH_DEADLINE,
+                                    FINISH_LENGTH, FINISH_SHED, FINISH_STOP)
+
+
+@pytest.fixture(scope="module")
+def setup(rules):
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    steps = StepFunctions.build(model, 8)
+    return cfg, params, model, steps
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=4, block_size=8, kv_pool_tokens=4096,
+                max_model_len=128, prefill_bucket=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _engine(setup, **kw):
+    _, params, model, steps = setup
+    return ContinuousBatchingEngine(model, params, _ecfg(**kw), steps=steps)
+
+
+def _req(cfg, rid, n=12, seed=0, **sp):
+    rng = np.random.default_rng(seed + rid)
+    return Request(req_id=rid,
+                   prompt=rng.integers(0, cfg.vocab_size, n,
+                                       dtype=np.int32),
+                   arrival_s=0.0,
+                   sampling=SamplingParams(**sp))
+
+
+SERVED = (FINISH_LENGTH, FINISH_STOP)
+
+
+# --------------------------------------------------------- SamplingParams --
+def test_deadline_params_validation():
+    with pytest.raises(ValueError, match="deadline_s"):
+        SamplingParams(deadline_s=0)
+    with pytest.raises(ValueError, match="ttft_deadline_s"):
+        SamplingParams(ttft_deadline_s=-1)
+    sp = SamplingParams(deadline_s=2.0, ttft_deadline_s=0.5)
+    assert sp.has_deadline
+    assert not SamplingParams().has_deadline
+    # strict >: at exactly the deadline the request is still live
+    assert not sp.expired(0.0, 2.0, first_token=True)
+    assert sp.expired(0.0, 2.01, first_token=True)
+    # ttft deadline only binds before the first token
+    assert sp.expired(0.0, 0.6, first_token=False)
+    assert not sp.expired(0.0, 0.6, first_token=True)
+
+
+# ------------------------------------------------------- expiry by phase --
+def test_deadline_expires_pre_admission(setup):
+    eng = _engine(setup)
+    req = _req(setup[0], 0, deadline_s=0.5, max_new_tokens=8)
+    free0 = eng.pool.manager.free_blocks
+    eng.add_request(req)
+    eng.step(1.0)                          # past the deadline while queued
+    assert req.finish_reason == FINISH_DEADLINE
+    assert req.generated == 0 and req.t_done == 1.0
+    assert eng.deadline_expired == 1
+    assert eng.pool.manager.free_blocks == free0   # nothing ever allocated
+    assert not eng.busy
+
+
+def test_deadline_expires_mid_prefill_chunked(setup):
+    eng = _engine(setup, prefill_chunk_tokens=16)
+    req = _req(setup[0], 0, n=48, ttft_deadline_s=0.5, max_new_tokens=8)
+    free0 = eng.pool.manager.free_blocks
+    eng.add_request(req)
+    eng.step(0.0)                          # first chunk only (48 > 16)
+    assert req in eng.prefilling
+    assert eng.pool.manager.free_blocks < free0    # partial prompt KV held
+    eng.step(1.0)                          # expires mid-PREFILLING
+    assert req.finish_reason == FINISH_DEADLINE
+    assert req.t_first_token is None and req.generated == 0
+    # the partial prompt's blocks came back the same step
+    assert eng.pool.manager.free_blocks == free0
+    assert not eng._prefilled and not eng.prefilling
+
+
+def test_deadline_expires_mid_decode_keeps_partial_output(setup):
+    eng = _engine(setup)
+    req = _req(setup[0], 0, deadline_s=1.0, max_new_tokens=32)
+    free0 = eng.pool.manager.free_blocks
+    eng.add_request(req)
+    eng.step(0.0)                          # prefill + first token
+    assert req in eng.running and req.generated >= 1
+    for _ in range(3):
+        eng.step(0.5)                      # still inside the deadline
+    partial = list(req.output_tokens)
+    assert len(partial) >= 4
+    eng.step(2.0)                          # expires mid-decode
+    assert req.finish_reason == FINISH_DEADLINE
+    assert list(req.output_tokens) == partial      # partial output kept
+    assert 0 < req.generated < 32
+    assert eng.pool.manager.free_blocks == free0   # blocks released now
+    assert eng.deadline_expired == 1
+
+
+def test_ttft_deadline_stops_binding_after_first_token(setup):
+    eng = _engine(setup)
+    req = _req(setup[0], 0, ttft_deadline_s=0.5, max_new_tokens=6)
+    eng.add_request(req)
+    eng.step(0.0)                          # first token inside the SLO
+    assert req.t_first_token is not None
+    while eng.busy:
+        eng.step(2.0)                      # way past ttft — irrelevant now
+    assert req.finish_reason in SERVED
+    assert req.generated == 6
+
+
+def test_deadline_releases_prefix_pins_same_step(setup):
+    """An expiring request sharing cached prefix blocks drops its pins
+    the step it expires: private blocks return to the free list, shared
+    ones fall back to cache-only refcount and stay reusable."""
+    cfg = setup[0]
+    eng = _engine(setup, prefix_cache=True)
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab_size, 32, dtype=np.int32)
+
+    warm = Request(req_id=0, prompt=prefix.copy(), arrival_s=0.0,
+                   sampling=SamplingParams(max_new_tokens=2))
+    eng.add_request(warm)
+    while eng.busy:
+        eng.step(0.0)
+    assert warm.finish_reason in SERVED
+    cached0 = eng.prefix.cached_blocks
+    assert cached0 > 0
+    free0 = eng.pool.manager.free_blocks
+
+    tail = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+    doomed = Request(req_id=1,
+                     prompt=np.concatenate([prefix, tail]),
+                     arrival_s=0.0,
+                     sampling=SamplingParams(max_new_tokens=32,
+                                             deadline_s=1.0))
+    eng.add_request(doomed)
+    eng.step(0.0)                          # admit with a prefix hit
+    assert eng.pool.manager.free_blocks < free0
+    eng.step(2.0)                          # expire mid-decode
+    assert doomed.finish_reason == FINISH_DEADLINE
+    # same-step reclaim: no block is pinned by the dead request — every
+    # block is either free or cache-owned (its prompt blocks may have
+    # been adopted by the cache on release, which is reuse, not a leak)
+    assert eng.pool.manager.free_blocks + eng.prefix.cached_blocks \
+        == free0 + cached0
+    assert eng.prefix.cached_blocks >= cached0
+
+    fresh = Request(req_id=2, prompt=prefix.copy(), arrival_s=0.0,
+                    sampling=SamplingParams(max_new_tokens=2))
+    eng.add_request(fresh)
+    while eng.busy:
+        eng.step(0.0)
+    assert fresh.finish_reason in SERVED   # cache still serves hits
+    assert eng.prefix.stats.hit_tokens > 0
+
+
+def test_deadline_streaming_cross_replica(setup):
+    """ServingAPI.stream over a 2-replica cluster: the deadline finish
+    arrives as a terminal GenerationOutput event, and the expiry count
+    aggregates into ClusterMetrics."""
+    cfg = setup[0]
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="sync")
+    api = ServingAPI(cluster)
+    normal = [api.submit(_req(cfg, i, seed=70, max_new_tokens=5))
+              for i in range(2)]
+    # raw-prompt submit: arrival_s = now, so the deadline clock starts
+    # here; big output budget guarantees expiry beats completion
+    rng = np.random.default_rng(73)
+    doomed = api.submit(rng.integers(0, cfg.vocab_size, 12,
+                                     dtype=np.int32),
+                        SamplingParams(max_new_tokens=64,
+                                       deadline_s=0.03))
+    events = list(api.stream(doomed))
+    assert events and events[-1].finished
+    assert events[-1].finish_reason == FINISH_DEADLINE
+    api.drain()
+    for h in normal:
+        assert h.finish_reason in SERVED
+    m = api.metrics()
+    assert m.deadline_expired == 1
+    assert m.finish_reasons[FINISH_DEADLINE] == 1
+
+
+# ------------------------------------------------------------- shedding --
+def test_shed_queue_full_is_graceful(setup):
+    api = ServingAPI(_engine(setup, max_waiting=1, max_batch=1))
+    cfg = setup[0]
+    h1 = api.submit(_req(cfg, 0, seed=80, max_new_tokens=4))
+    h2 = api.submit(_req(cfg, 1, seed=80, max_new_tokens=4))
+    assert not h1.done and h2.done         # queue bound hit, no exception
+    assert h2.finish_reason == FINISH_SHED
+    events = list(api.stream(h2))          # stream still terminates
+    assert len(events) == 1 and events[0].finished \
+        and events[0].finish_reason == FINISH_SHED
+    api.drain()
+    assert h1.finish_reason in SERVED
+    m = api.metrics()
+    assert m.shed == 1 and m.shed_reasons == {"queue_full": 1}
+    assert m.finish_reasons[FINISH_SHED] == 1
+
+
+def test_shed_kv_pressure(setup):
+    eng = _engine(setup, shed_kv_fraction=0.05, max_batch=1,
+                  kv_pool_tokens=256, max_model_len=64)
+    api = ServingAPI(eng)
+    cfg = setup[0]
+    h1 = api.submit(_req(cfg, 0, n=24, seed=81, max_new_tokens=16))
+    for _ in range(2):
+        api._pump_once()                   # h1 decoding, pool in use
+    assert eng.pool.manager.used_fraction >= 0.05
+    h2 = api.submit(_req(cfg, 1, seed=81, max_new_tokens=4))
+    assert not h2.done                     # queued: pressure needs a queue
+    h3 = api.submit(_req(cfg, 2, seed=81, max_new_tokens=4))
+    assert h3.done and h3.finish_reason == FINISH_SHED
+    api.drain()
+    assert h1.finish_reason in SERVED and h2.finish_reason in SERVED
+    assert api.metrics().shed_reasons == {"kv_pressure": 1}
+
+
+def test_shed_queue_delay_and_unmeetable_deadline(setup):
+    cfg = setup[0]
+    eng = _engine(setup)
+    eng.run(sharegpt_like(3, cfg.vocab_size, seed=6, mean_in=10,
+                          mean_out=8, max_len=32, sigma=0.2))
+    assert eng.estimated_queue_delay_s() == 0.0    # empty queue
+    # queue up committed work so the estimate is positive
+    eng.add_request(_req(cfg, 10, n=24, seed=82, max_new_tokens=64))
+    est = eng.estimated_queue_delay_s()
+    assert est > 0.0
+    # pure checks: the policy knob and the per-request deadline version
+    hopeless = _req(cfg, 11, seed=82, max_new_tokens=4,
+                    deadline_s=min(est / 2, 1e-4))
+    assert eng.shed_check(hopeless, now=0.0) == "deadline_unmeetable"
+    fine = _req(cfg, 12, seed=82, max_new_tokens=4, deadline_s=est + 60)
+    assert eng.shed_check(fine, now=0.0) is None
+    eng2 = _engine(setup, shed_queue_delay_s=1e-6)
+    eng2.itl_samples.extend(eng.itl_samples)
+    eng2.decode_token_samples.extend(eng.decode_token_samples)
+    eng2.add_request(_req(cfg, 13, n=24, seed=82, max_new_tokens=64))
+    assert eng2.shed_check(_req(cfg, 14, seed=82, max_new_tokens=4),
+                           now=0.0) == "queue_delay"
+
+
+def test_cluster_sheds_only_when_every_replica_full(setup):
+    cfg = setup[0]
+    engines = [_engine(setup, max_waiting=1, max_batch=1)
+               for _ in range(2)]
+    cluster = ReplicatedCluster(engines, mode="sync")
+    reqs = [_req(cfg, i, seed=83, max_new_tokens=4) for i in range(6)]
+    m = cluster.run(reqs)                  # overload: degrades, no raise
+    assert m.shed > 0
+    assert m.completed == 6                # every request reached t_done
+    assert all(r.t_done is not None for r in reqs)
+    served = [r for r in reqs if r.finish_reason in SERVED]
+    shed = [r for r in reqs if r.finish_reason == FINISH_SHED]
+    assert len(served) + len(shed) == 6 and served
+    assert m.finish_reasons[FINISH_SHED] == len(shed) == m.shed
+    assert "queue_full" in cluster.shed_reasons
+
+
+# ----------------------------------------------- satellite metric series --
+def test_queued_abort_counter_engine(setup):
+    api = ServingAPI(_engine(setup, max_batch=1))
+    cfg = setup[0]
+    h1 = api.submit(_req(cfg, 0, seed=84, max_new_tokens=4))
+    h2 = api.submit(_req(cfg, 1, seed=84, max_new_tokens=4))
+    assert api.abort(h2)                   # still in the arrival queue
+    assert h2.finish_reason == FINISH_ABORT
+    api.drain()
+    m = api.metrics()
+    assert m.queued_aborts == 1
+    assert h1.finish_reason in SERVED
+
+
+def test_queued_abort_counter_cluster(setup):
+    cfg = setup[0]
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="sync")
+    api = ServingAPI(cluster)
+    handles = [api.submit(_req(cfg, i, seed=85, max_new_tokens=4))
+               for i in range(3)]
+    assert api.abort(handles[2])           # routed but never admitted
+    api.drain()
+    m = api.metrics()
+    assert m.queued_aborts == 1
+    assert m.finish_reasons[FINISH_ABORT] == 1
+
+
+def test_preemptions_are_first_class_series(setup):
+    cfg = setup[0]
+    reqs = sharegpt_like(6, cfg.vocab_size, seed=11, mean_in=20,
+                         mean_out=36, max_len=60, sigma=0.1)
+    tight = _engine(setup, max_batch=3, kv_pool_tokens=128,
+                    max_model_len=96)
+    m = tight.run(reqs)
+    assert tight.preemptions > 0
+    assert m.preemptions == tight.preemptions
+    assert sum(m.preemption_series) == m.preemptions
+    assert "preempt=" in m.robustness_row()
+
+    reqs2 = sharegpt_like(6, cfg.vocab_size, seed=11, mean_in=20,
+                          mean_out=36, max_len=60, sigma=0.1)
+    cluster = ReplicatedCluster(
+        [_engine(setup, max_batch=3, kv_pool_tokens=128,
+                 max_model_len=96)],
+        mode="sync")
+    cm = cluster.run(reqs2)
+    assert cm.preemptions > 0
+    assert cm.per_replica[0].metrics.preemptions \
+        == cm.per_replica[0].preemptions == cm.preemptions
+    assert sum(cm.per_replica[0].metrics.preemption_series) \
+        == cm.preemptions

@@ -1,0 +1,312 @@
+"""Fault tolerance: deterministic fault injection, replica quarantine +
+redrive (bit-identical outputs on survivors), respawn, poison-request
+eviction, redrive budgets, watchdog wedge detection, and the prompt
+fail-fast path when recovery is disabled."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model, init_params
+from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                           FaultInjector, FaultSpec, InjectedFault,
+                           ReplicatedCluster, Request, SamplingParams,
+                           ServingAPI, StepFunctions, parse_fault,
+                           sharegpt_like)
+from repro.serving.engine import RequestTooLarge
+from repro.serving.workload import FINISH_FAILED, FINISH_LENGTH, FINISH_STOP
+
+
+@pytest.fixture(scope="module")
+def setup(rules):
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    steps = StepFunctions.build(model, 8)
+    return cfg, params, model, steps
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=4, block_size=8, kv_pool_tokens=4096,
+                max_model_len=128, prefill_bucket=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _engine(setup, **kw):
+    _, params, model, steps = setup
+    return ContinuousBatchingEngine(model, params, _ecfg(**kw), steps=steps)
+
+
+def _wl(cfg, n=4, seed=2, mean_out=6):
+    return sharegpt_like(n, cfg.vocab_size, seed=seed, mean_in=12,
+                         mean_out=mean_out, max_len=48, sigma=0.4)
+
+
+def _outputs(reqs):
+    return [list(r.output_tokens) for r in reqs]
+
+
+SERVED = (FINISH_LENGTH, FINISH_STOP)
+
+
+# ---------------------------------------------------------- fault specs --
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="explode", replica=0, step=1)
+    with pytest.raises(ValueError, match="replica"):
+        FaultSpec(kind="kill", replica=-1, step=1)
+    with pytest.raises(ValueError, match="step"):
+        FaultSpec(kind="kill", replica=0, step=0)
+    with pytest.raises(ValueError, match="seconds"):
+        FaultSpec(kind="delay", replica=0, step=1, seconds=-1)
+
+
+def test_parse_fault_cli_shape():
+    spec = parse_fault("replica=1,step=50")
+    assert spec == FaultSpec(kind="kill", replica=1, step=50)
+    spec = parse_fault("replica=0, step=3, kind=delay, seconds=0.25")
+    assert spec.kind == "delay" and spec.seconds == 0.25
+    with pytest.raises(ValueError, match="unknown"):
+        parse_fault("replica=0,step=1,color=red")
+    with pytest.raises(ValueError, match="needs at least"):
+        parse_fault("step=1")
+
+
+def test_injector_fires_once_at_or_after_step():
+    inj = FaultInjector([FaultSpec("kill", replica=0, step=3)])
+    inj.on_step(0, 1)
+    inj.on_step(1, 5)                     # other replica: never fires
+    with pytest.raises(InjectedFault):
+        inj.on_step(0, 4)                 # at-or-after semantics
+    assert not inj.pending and len(inj.fired) == 1
+    inj.on_step(0, 5)                     # fires exactly once
+    inj.reset()
+    assert inj.pending == (FaultSpec("kill", replica=0, step=3),)
+
+
+def test_random_kill_seeded():
+    a = FaultInjector.random_kill(4, 100, seed=7)
+    b = FaultInjector.random_kill(4, 100, seed=7)
+    assert a.specs == b.specs
+    spec = a.specs[0]
+    assert spec.kind == "kill" and 0 <= spec.replica < 4 \
+        and 1 <= spec.step <= 100
+
+
+def test_alloc_fail_fault_skips_one_admission(setup):
+    eng = _engine(setup)
+    eng.faults = FaultInjector([FaultSpec("alloc-fail", replica=0, step=1)])
+    req = _wl(setup[0], n=1, seed=5)[0]
+    eng.add_request(req)
+    eng.step(0.0)
+    assert len(eng.waiting) == 1          # admission stolen, request waits
+    eng.step(0.0)
+    assert not eng.waiting                # admitted next step, no crash
+    while eng.busy:
+        eng.step(0.0)
+    assert req.finish_reason in SERVED
+
+
+# ------------------------------------------------------- kill + redrive --
+def test_kill_recovery_sync_bit_identical(setup):
+    cfg = setup[0]
+    baseline = _wl(cfg, n=6, seed=9, mean_out=10)
+    ReplicatedCluster([_engine(setup), _engine(setup)],
+                      mode="sync").run(baseline)
+    assert all(r.finish_reason in SERVED for r in baseline)
+
+    inj = FaultInjector([FaultSpec("kill", replica=1, step=4)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="sync", faults=inj)
+    reqs = _wl(cfg, n=6, seed=9, mean_out=10)
+    m = cluster.run(reqs)
+    assert len(inj.fired) == 1
+    assert m.faults == 1 and m.redriven > 0 and m.lost == 0
+    assert m.completed == 6
+    # every redriven request regenerated the exact fault-free tokens
+    assert _outputs(reqs) == _outputs(baseline)
+    assert all(r.finish_reason in SERVED for r in reqs)
+    stats = m.per_replica[1]
+    assert not stats.healthy and stats.faults == 1
+    assert stats.availability < 1.0 and m.availability < 1.0
+    assert not cluster.replicas[1].healthy
+    assert "faults:" in m.summary()
+
+
+def test_kill_recovery_threaded_bit_identical(setup):
+    cfg = setup[0]
+    baseline = _wl(cfg, n=6, seed=9, mean_out=10)
+    ReplicatedCluster([_engine(setup), _engine(setup)],
+                      mode="sync").run(baseline)
+
+    inj = FaultInjector([FaultSpec("kill", replica=1, step=4)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="thread", faults=inj)
+    reqs = _wl(cfg, n=6, seed=9, mean_out=10)
+    m = cluster.run(reqs)
+    assert m.faults == 1 and m.completed == 6 and m.lost == 0
+    assert all(r.finish_reason in SERVED for r in reqs)
+    # same tokens as the fault-free run for every non-lost request
+    # (timed dispatch may route differently, but decode is per-request
+    # deterministic, so outputs — not placements — must match)
+    assert _outputs(reqs) == _outputs(baseline)
+
+
+def test_kill_recovery_sampled_bit_identical(setup):
+    cfg = setup[0]
+
+    def mk():
+        rng = np.random.default_rng(17)
+        return [Request(req_id=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 10,
+                                            dtype=np.int32),
+                        arrival_s=0.0,
+                        sampling=SamplingParams(temperature=0.8,
+                                                top_k=20, seed=100 + i,
+                                                max_new_tokens=8))
+                for i in range(4)]
+
+    baseline = mk()
+    ReplicatedCluster([_engine(setup), _engine(setup)],
+                      mode="sync").run(baseline)
+
+    inj = FaultInjector([FaultSpec("kill", replica=0, step=3)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="sync", faults=inj)
+    reqs = mk()
+    m = cluster.run(reqs)
+    assert m.completed == 4 and m.redriven > 0
+    # counter-based per-request RNG: redriven sampled decode replays the
+    # same stream positions, so even temperature>0 outputs are identical
+    assert _outputs(reqs) == _outputs(baseline)
+
+
+def test_respawn_returns_replica_to_service(setup):
+    inj = FaultInjector([FaultSpec("kill", replica=1, step=3)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="sync", faults=inj, respawn=True)
+    reqs = _wl(setup[0], n=8, seed=21, mean_out=10)
+    m = cluster.run(reqs)
+    assert m.faults == 1 and m.completed == 8 and m.lost == 0
+    rep = cluster.replicas[1]
+    assert rep.healthy and rep.downtime >= 0.0
+    stats = m.per_replica[1]
+    assert stats.healthy and stats.faults == 1
+    # the respawned engine is a fresh build sharing the compiled steps
+    assert rep.engine is not None and rep.engine.replica_id == 1
+    assert all(r.finish_reason in SERVED for r in reqs)
+
+
+def test_poison_request_evicted_not_fatal(setup):
+    """Degrade-don't-die: a request that can never fit the pool fails
+    alone; the replica keeps serving everyone else. (On a bare engine
+    the same request is still a hard RuntimeError — see
+    test_chunked_prefill's pool-exhaustion test.)"""
+    cfg = setup[0]
+    eng = _engine(setup, kv_pool_tokens=128, max_model_len=128,
+                  prefill_bucket=128)
+    rng = np.random.default_rng(3)
+    poison = Request(req_id=99,
+                     prompt=rng.integers(0, cfg.vocab_size, 120,
+                                         dtype=np.int32),
+                     arrival_s=0.0,
+                     sampling=SamplingParams(max_new_tokens=4))
+    small = [Request(req_id=i,
+                     prompt=rng.integers(0, cfg.vocab_size, 6,
+                                         dtype=np.int32),
+                     arrival_s=0.0,
+                     sampling=SamplingParams(max_new_tokens=4))
+             for i in range(3)]
+    cluster = ReplicatedCluster([eng], mode="sync")
+    m = cluster.run([poison] + small)
+    assert poison.finish_reason == FINISH_FAILED
+    assert all(r.finish_reason in SERVED for r in small)
+    assert cluster.replicas[0].healthy
+    assert m.lost == 1 and m.faults == 1 and m.completed == 4
+    assert m.finish_reasons[FINISH_FAILED] == 1
+
+
+def test_request_too_large_is_runtime_error(setup):
+    """The bare-engine contract is unchanged: RequestTooLarge subclasses
+    RuntimeError with the legacy message."""
+    assert issubclass(RequestTooLarge, RuntimeError)
+    exc = RequestTooLarge("KV pool exhausted: nope", 7)
+    assert exc.req_id == 7
+
+
+def test_all_replicas_dead_requests_fail_without_hang(setup):
+    inj = FaultInjector([FaultSpec("kill", replica=0, step=2),
+                         FaultSpec("kill", replica=1, step=2)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="sync", faults=inj)
+    reqs = _wl(setup[0], n=6, seed=31, mean_out=20)
+    m = cluster.run(reqs)                 # completes, never raises/hangs
+    assert m.faults == 2
+    assert all(r.t_done is not None for r in reqs)
+    assert any(r.finish_reason == FINISH_FAILED for r in reqs)
+    assert m.completed == 6
+    assert not any(rep.healthy for rep in cluster.replicas)
+    assert m.availability < 1.0
+
+
+def test_redrive_budget_caps_retries(setup):
+    """max_redrives=0: stranded requests fail immediately instead of
+    redriving — the budget floor."""
+    inj = FaultInjector([FaultSpec("kill", replica=1, step=3)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="sync", faults=inj, max_redrives=0)
+    reqs = _wl(setup[0], n=6, seed=9, mean_out=10)
+    m = cluster.run(reqs)
+    assert m.redriven == 0 and m.lost > 0
+    assert all(r.t_done is not None for r in reqs)
+    # replica 0's requests were untouched by replica 1's death
+    assert any(r.finish_reason in SERVED for r in reqs)
+
+
+def test_recover_false_threaded_stops_promptly_and_stamps(setup):
+    """Legacy fail-fast semantics, minus the drain spin: on a replica
+    error the feeder signals surviving loops and every request that will
+    never be served carries an explicit "failed" reason."""
+    inj = FaultInjector([FaultSpec("kill", replica=1, step=2)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="thread", faults=inj, recover=False)
+    reqs = _wl(setup[0], n=6, seed=41, mean_out=30)
+    with pytest.raises(InjectedFault):
+        cluster.run(reqs)
+    # every request is terminal: served before the crash, or failed
+    assert all(r.t_done is not None for r in reqs)
+    assert any(r.finish_reason == FINISH_FAILED for r in reqs)
+
+
+def test_watchdog_trips_on_delayed_step(setup):
+    inj = FaultInjector([FaultSpec("delay", replica=0, step=2,
+                                   seconds=0.05)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="sync", faults=inj, watchdog_s=0.01)
+    reqs = _wl(setup[0], n=6, seed=51, mean_out=10)
+    m = cluster.run(reqs)
+    assert m.watchdog_trips >= 1
+    assert m.completed == 6
+    assert all(r.finish_reason in SERVED for r in reqs)
+    # wedge is advisory and self-heals: the replica is healthy at the end
+    assert all(rep.healthy for rep in cluster.replicas)
+
+
+def test_facade_pump_recovers_from_kill(setup):
+    """Streaming path: a replica death under ServingAPI.submit/drain
+    redrives onto the survivor and every handle finishes served."""
+    inj = FaultInjector([FaultSpec("kill", replica=1, step=3)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="sync", faults=inj)
+    api = ServingAPI(cluster)
+    reqs = _wl(setup[0], n=4, seed=61, mean_out=8)
+    handles = [api.submit(r) for r in reqs]
+    outs = api.drain()
+    assert len(outs) == 4
+    assert cluster.redriven > 0
+    for h in handles:
+        assert h.done and h.finish_reason in SERVED
+        assert list(outs[h.req_id].token_ids) \
+            == list(h.request.output_tokens)
+    assert api.metrics().faults == 1
