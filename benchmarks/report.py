@@ -1,15 +1,30 @@
 """Regenerate the data-driven sections of EXPERIMENTS.md from artifacts
-(experiments/dryrun/*.json, experiments/perf/*.json, experiments/paper/*).
+(experiments/dryrun/*.json, experiments/perf/*.json, experiments/paper/*)
+and consolidate every ``experiments/paper/BENCH_*.json`` into one claim
+summary table.
 
-    PYTHONPATH=src python -m benchmarks.report
+The BENCH consolidation is strict by design: a benchmark artifact that a
+PR promised but never wrote, or one carrying NaN fields, fails the
+report loudly (exit 1 with the offending paths) instead of producing a
+table that silently reads as "all green".
+
+    PYTHONPATH=src python -m benchmarks.report [--skip-experiments]
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
+import math
 import os
+import sys
+from typing import Dict, List, Tuple
 
 from benchmarks.roofline_table import load_records
+
+# every BENCH_*.json the benchmark suite is expected to have written;
+# grows with each PR that adds a benchmarks/<name>.py artifact
+REQUIRED_BENCHES = ("BENCH_faults.json", "BENCH_obs.json")
 
 
 def fmt_case(r):
@@ -68,20 +83,92 @@ def perf_section() -> str:
     return "\n".join(out)
 
 
-def main():
-    text = open("EXPERIMENTS.md").read()
-    for marker, gen in (("ROOFLINE_TABLE", roofline_section),
-                        ("PERF_TABLE", perf_section)):
-        begin = f"<!-- BEGIN {marker} -->"
-        end = f"<!-- END {marker} -->"
-        if begin in text:
-            pre, rest = text.split(begin, 1)
-            _, post = rest.split(end, 1)
-            text = pre + begin + "\n" + gen() + "\n" + end + post
-    with open("EXPERIMENTS.md", "w") as f:
-        f.write(text)
-    print("EXPERIMENTS.md regenerated")
+# ------------------------------------------------- BENCH consolidation --
+def _walk_nan(obj, path: str, bad: List[str]):
+    """Collect dotted paths of every NaN/Inf number in a JSON tree."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _walk_nan(v, f"{path}.{k}" if path else str(k), bad)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _walk_nan(v, f"{path}[{i}]", bad)
+    elif isinstance(obj, float) and not math.isfinite(obj):
+        bad.append(path)
+
+
+def load_benches(dirname: str = "experiments/paper",
+                 required: Tuple[str, ...] = REQUIRED_BENCHES
+                 ) -> Dict[str, Dict]:
+    """Load every BENCH_*.json; raise on required-but-missing files and
+    on NaN/Inf fields anywhere in an artifact."""
+    missing = [fn for fn in required
+               if not os.path.exists(os.path.join(dirname, fn))]
+    if missing:
+        raise FileNotFoundError(
+            f"required benchmark artifacts missing from {dirname}: "
+            f"{missing} — run the corresponding benchmarks/<name>.py")
+    benches: Dict[str, Dict] = {}
+    for fn in sorted(glob.glob(os.path.join(dirname, "BENCH_*.json"))):
+        with open(fn) as f:
+            doc = json.load(f)
+        bad: List[str] = []
+        _walk_nan(doc, "", bad)
+        if bad:
+            raise ValueError(f"{fn} has non-finite fields: {bad[:10]}"
+                             + (" ..." if len(bad) > 10 else ""))
+        name = os.path.basename(fn)[len("BENCH_"):-len(".json")]
+        benches[name] = doc
+    return benches
+
+
+def bench_table(benches: Dict[str, Dict]) -> str:
+    """One consolidated claims table across every benchmark artifact."""
+    lines = ["| bench | claim | pass |", "|---|---|---|"]
+    for name, doc in benches.items():
+        claims = {k: v for k, v in doc.items() if k.startswith("claim_")}
+        if not claims:
+            lines.append(f"| {name} | (no claims recorded) | — |")
+        for k, v in sorted(claims.items()):
+            mark = "PASS" if v else "**FAIL**"
+            lines.append(f"| {name} | {k[len('claim_'):]} | {mark} |")
+    return "\n".join(lines)
+
+
+def bench_failures(benches: Dict[str, Dict]) -> List[str]:
+    return [f"{name}:{k}" for name, doc in benches.items()
+            for k, v in doc.items() if k.startswith("claim_") and not v]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-experiments", action="store_true",
+                    help="only consolidate BENCH_*.json; leave "
+                         "EXPERIMENTS.md untouched")
+    ap.add_argument("--bench-dir", default="experiments/paper")
+    args = ap.parse_args()
+
+    if not args.skip_experiments:
+        text = open("EXPERIMENTS.md").read()
+        for marker, gen in (("ROOFLINE_TABLE", roofline_section),
+                            ("PERF_TABLE", perf_section)):
+            begin = f"<!-- BEGIN {marker} -->"
+            end = f"<!-- END {marker} -->"
+            if begin in text:
+                pre, rest = text.split(begin, 1)
+                _, post = rest.split(end, 1)
+                text = pre + begin + "\n" + gen() + "\n" + end + post
+        with open("EXPERIMENTS.md", "w") as f:
+            f.write(text)
+        print("EXPERIMENTS.md regenerated")
+
+    benches = load_benches(args.bench_dir)      # raises loudly
+    print(bench_table(benches))
+    failed = bench_failures(benches)
+    if failed:
+        print(f"FAILED_CLAIMS: {failed}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -43,6 +43,10 @@ def main() -> int:
                     help="also run the fault-tolerance benchmark (kill "
                          "1 of 2 replicas mid-run: redrive bit-identity, "
                          "goodput retention, graceful overload shedding)")
+    ap.add_argument("--obs", action="store_true",
+                    help="also run the observability benchmark (hook "
+                         "overhead <= 5%%, live roofline == offline "
+                         "census, trace/exposition validity)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import paper_claims as pc
@@ -151,6 +155,21 @@ def main() -> int:
 
         _run("fault_tolerance", lambda: faults_suite(smoke=True),
              _faults_derive)
+
+    if args.obs:
+        from benchmarks.observability import run_suite as obs_suite
+
+        def _obs_derive(o):
+            for key in ("claim_overhead_le_5pct",
+                        "claim_live_matches_offline",
+                        "claim_decode_memory_bound", "claim_trace_valid"):
+                claim(o, key)
+            return (f"overhead="
+                    f"{o['overhead']['overhead_fraction'] * 100:.1f}%;"
+                    f"live_bw_util="
+                    f"{o['live_vs_offline']['live_bw_util_mean']:.2f}")
+
+        _run("observability", lambda: obs_suite(smoke=True), _obs_derive)
 
     # §Roofline aggregation from the dry-run artifacts, if present
     from benchmarks.roofline_table import load_records, summary

@@ -91,6 +91,19 @@ def main():
                     help="mark a replica wedged (and route around it) "
                          "when a step exceeds S seconds (0 = disabled; "
                          "cluster mode only)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record request-lifecycle + step-phase spans and "
+                         "write Chrome-trace/Perfetto JSON to PATH (open "
+                         "in ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the final metrics snapshot to PATH — "
+                         "Prometheus text exposition if PATH ends in "
+                         ".prom, versioned JSON otherwise ('-' = stdout)")
+    ap.add_argument("--obs-interval", type=float, default=10.0,
+                    metavar="S",
+                    help="periodic metrics-emit interval for --metrics-out "
+                         "during --stream serving (the batch path emits "
+                         "once at the end)")
     args = ap.parse_args()
 
     import jax
@@ -197,6 +210,19 @@ def main():
                 # single engine = replica 0; kills surface as
                 # InjectedFault (no peer to redrive onto)
                 backend.faults = faults
+        # runtime observability: roofline attribution + lifecycle tracing
+        # attach to the backend; metrics snapshots go through the emitter
+        obs = emitter = None
+        if args.trace or args.metrics_out:
+            from repro.serving import MetricsEmitter, Observability
+            obs = Observability(hw=hw)
+            obs.attach_backend(backend)
+            if args.metrics_out:
+                path = None if args.metrics_out == "-" else args.metrics_out
+                fmt = "prom" if args.metrics_out.endswith(".prom") \
+                    else "json"
+                emitter = MetricsEmitter(path, fmt=fmt,
+                                         interval_s=args.obs_interval)
         if args.stream:
             # online path: submit everything through the facade, stream
             # the first request's token deltas, drain the rest
@@ -205,7 +231,7 @@ def main():
                       "cooperatively from the calling thread; "
                       "--cluster-mode thread applies only to the batch "
                       "run() path")
-            api = ServingAPI(backend)
+            api = ServingAPI(backend, obs=obs, emitter=emitter)
             handles = [api.submit(r) for r in reqs]
             for ev in api.stream(handles[0]):
                 print(f"[stream] req {ev.req_id} +{len(ev.new_token_ids)} "
@@ -215,6 +241,27 @@ def main():
             metrics = api.metrics()
         else:
             metrics = backend.run(reqs)
+        if emitter is not None:
+            emitter.emit(metrics)       # final end-of-run snapshot
+            if args.metrics_out != "-":
+                print(f"[obs] metrics -> {args.metrics_out} "
+                      f"({emitter.emits} snapshot(s))")
+        if obs is not None:
+            if args.trace:
+                obs.export_chrome_trace(args.trace)
+                print(f"[obs] trace -> {args.trace} "
+                      f"({obs.trace.n_events} events; open in "
+                      f"ui.perfetto.dev)")
+            for row in obs.roofline_rows():
+                print(f"[obs] {row}")
+            ob0 = obs.observer(0)
+            if ob0 is not None:
+                p = ob0.phase_summary()
+                print(f"[obs] step phases: sched={p['schedule_s']*1e3:.2f}ms "
+                      f"dispatch={p['dispatch_s']*1e3:.2f}ms "
+                      f"device={p['device_s']*1e3:.2f}ms "
+                      f"host={p['host_s']*1e3:.2f}ms "
+                      f"host_gap={p['host_gap_fraction']*100:.0f}%")
         if n_rep > 1:
             print(metrics.summary())
             return

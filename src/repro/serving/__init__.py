@@ -14,3 +14,8 @@ from repro.serving.cluster import (ClusterMetrics, ReplicatedCluster,  # noqa
                                    autoscale)
 from repro.serving.api import (GenerationOutput, RequestHandle,  # noqa
                                ServingAPI)
+from repro.serving.obs import (BoundedSeries, LiveRoofline,  # noqa
+                               MetricsEmitter, Observability, StepPhases,
+                               Tracer, lint_prometheus, metrics_from_json,
+                               metrics_to_json, prometheus_text,
+                               validate_chrome_trace)

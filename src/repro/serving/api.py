@@ -342,7 +342,14 @@ class ServingAPI:
     """The online frontend over an engine or a ReplicatedCluster."""
 
     def __init__(self, backend: Union[ContinuousBatchingEngine,
-                                      ReplicatedCluster]):
+                                      ReplicatedCluster], *,
+                 obs=None, emitter=None):
+        """``obs`` (a :class:`~repro.serving.obs.Observability`) attaches
+        runtime observability to the wrapped backend — roofline
+        attribution, lifecycle tracing — for this session; ``emitter``
+        (a :class:`~repro.serving.obs.MetricsEmitter`) is ticked once per
+        scheduling round on the serving timeline, so a streamed session
+        emits periodic metrics snapshots without its own timer thread."""
         if isinstance(backend, ReplicatedCluster):
             self._backend = _ClusterBackend(backend)
         elif isinstance(backend, ContinuousBatchingEngine):
@@ -352,6 +359,10 @@ class ServingAPI:
                 f"ServingAPI wraps a ContinuousBatchingEngine or a "
                 f"ReplicatedCluster, got {type(backend).__name__}")
         self.backend = backend
+        self.obs = obs
+        if obs is not None:
+            obs.attach_backend(backend)
+        self.emitter = emitter
         self._handles: Dict[int, RequestHandle] = {}
         self._submitted: List[Request] = []
         self._next_id = 0
@@ -378,7 +389,10 @@ class ServingAPI:
         ff = self._backend.next_arrival_if_idle()
         if ff is not None:
             self._now_floor = max(self._now_floor, ff)
-        return self._backend.pump(self._now(), self._clock)
+        busy = self._backend.pump(self._now(), self._clock)
+        if self.emitter is not None:
+            self.emitter.tick(self._now(), self.metrics)
+        return busy
 
     # ---------------------------------------------------------- submit --
     def submit(self, prompt, sampling: Optional[SamplingParams] = None, *,

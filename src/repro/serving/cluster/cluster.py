@@ -178,6 +178,9 @@ class ReplicatedCluster:
             rep.engine.replica_id = rep.idx
             if faults is not None:
                 rep.engine.faults = faults
+        # observability session (serving.obs.Observability): installed by
+        # Observability.attach_cluster — None keeps every hook site free
+        self.obs = None
         self.queue_samples: List[List[int]] = []
         self._feeding_done = False
         self._errors: List[BaseException] = []
@@ -327,11 +330,17 @@ class ReplicatedCluster:
             if rep.engine.evict_request(exc.req_id, now,
                                         FINISH_FAILED) is not None:
                 self.lost += 1
+            if self.obs is not None:
+                self.obs.replica_event(rep.idx, "evict_poison",
+                                       {"req": exc.req_id})
             return
         rep.healthy = False
         rep.wedged = False
         rep.error = exc
         rep.failed_at = now
+        if self.obs is not None:
+            self.obs.replica_event(rep.idx, "quarantine",
+                                   {"error": f"{type(exc).__name__}: {exc}"})
         eng = rep.engine
         # strand in admission order (running were admitted first) so
         # redrives keep FCFS service order on the survivors
@@ -361,8 +370,13 @@ class ReplicatedCluster:
                 self._mark_failed(req, now)
                 continue
             self._redrives[req.req_id] = n + 1
-            if self.route_one(req) is not None:
+            tgt = self.route_one(req)
+            if tgt is not None:
                 self.redriven += 1
+                if self.obs is not None:
+                    self.obs.replica_event(
+                        tgt.idx, "redrive",
+                        {"req": req.req_id, "from": rep.idx})
 
     def _respawn(self, rep: Replica, now: float):
         """Rebuild a dead co-located replica from its engine's shared
@@ -375,6 +389,10 @@ class ReplicatedCluster:
         eng.clock = old.clock
         eng.faults = old.faults
         eng.replica_id = old.replica_id
+        if self.obs is not None:
+            # the fresh engine rejoins the same observer (same trace rows)
+            self.obs.attach(eng, rep.idx)
+            self.obs.replica_event(rep.idx, "respawn")
         rep.engine = eng
         rep.healthy = True
         rep.error = None
@@ -395,8 +413,12 @@ class ReplicatedCluster:
                 if not rep.wedged:
                     rep.wedged = True
                     self.watchdog_trips += 1
+                    if self.obs is not None:
+                        self.obs.replica_event(rep.idx, "watchdog_wedged")
             elif rep.wedged:
                 rep.wedged = False
+                if self.obs is not None:
+                    self.obs.replica_event(rep.idx, "watchdog_healed")
         return busy
 
     def _check_watchdog(self):
@@ -412,6 +434,8 @@ class ReplicatedCluster:
                     and wall - rep.last_step_at > self.watchdog_s:
                 rep.wedged = True
                 self.watchdog_trips += 1
+                if self.obs is not None:
+                    self.obs.replica_event(rep.idx, "watchdog_wedged")
 
     def _fail_stranded(self, pending: deque, now: float):
         """Fail-fast path (``recover=False``): stamp every request that

@@ -105,6 +105,7 @@ from repro.models.sampler import (positions_array, sample_tokens,
                                   stack_sampling)
 from repro.serving.faults import FaultInjector
 from repro.serving.metrics import ServingMetrics
+from repro.serving.obs.series import DEFAULT_SERIES_MAXLEN, BoundedSeries
 from repro.serving.workload import (FINISH_ABORT, FINISH_DEADLINE,
                                     FINISH_FAILED, FINISH_LENGTH,
                                     FINISH_SHED, FINISH_STOP, Request)
@@ -166,6 +167,12 @@ class EngineConfig:
     # already blows is shed as "deadline_unmeetable" even without a
     # global bound
     shed_queue_delay_s: Optional[float] = None
+    # bound on every per-step telemetry series (ITL, KV occupancy, stall,
+    # token splits, preemptions, observability phase/roofline samples):
+    # a series reaching this length decimates itself (uniform 1-in-N
+    # downsampling over the whole run) instead of growing — soak runs
+    # keep O(1) host memory per series. See serving.obs.series.
+    series_maxlen: int = DEFAULT_SERIES_MAXLEN
 
     def __post_init__(self):
         """Fail loudly at construction instead of as a downstream shape
@@ -221,6 +228,9 @@ class EngineConfig:
             raise ValueError(
                 f"shed_queue_delay_s must be > 0 (or None to disable), "
                 f"got {self.shed_queue_delay_s}")
+        if self.series_maxlen < 2:
+            raise ValueError(
+                f"series_maxlen must be >= 2, got {self.series_maxlen}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -356,10 +366,16 @@ class ContinuousBatchingEngine:
         # deadlines are only scanned for when at least one admitted
         # request carries one (keeps the fault-free hot loop unchanged)
         self._has_deadlines = False
-        # telemetry
-        self.itl_samples: List[float] = []
-        self.batch_samples: List[int] = []
-        self.kv_fraction_samples: List[float] = []
+        # observability hook sink (serving.obs): None = detached, every
+        # hook site is one attribute check; Observability.attach installs
+        # an EngineObserver here
+        self.obs = None
+        # telemetry — every per-step series is bounded (decimating, see
+        # serving.obs.series) so soak runs cannot grow host memory
+        ml = ecfg.series_maxlen
+        self.itl_samples: List[float] = BoundedSeries(ml)
+        self.batch_samples: List[int] = BoundedSeries(ml)
+        self.kv_fraction_samples: List[float] = BoundedSeries(ml)
         self.max_kv_fraction = 0.0
         self.preemptions = 0
         self.prefill_tokens_computed = 0
@@ -367,13 +383,13 @@ class ContinuousBatchingEngine:
         # prefill before the decode launch, and the per-step prefill /
         # decode token split — the observables that make HOL blocking
         # (and the chunked fix) measurable
-        self.stall_samples: List[float] = []
-        self.prefill_token_samples: List[int] = []
-        self.decode_token_samples: List[int] = []
+        self.stall_samples: List[float] = BoundedSeries(ml)
+        self.prefill_token_samples: List[int] = BoundedSeries(ml)
+        self.decode_token_samples: List[int] = BoundedSeries(ml)
         # per-step recompute re-admissions (preemptions delta): recovery
         # redrives ride the preemption path, so this series is how a
         # thrashing pool — or a redrive storm — becomes visible
-        self.preemption_samples: List[int] = []
+        self.preemption_samples: List[int] = BoundedSeries(ml)
         # robustness counters (also broken down in finish_reasons)
         self.deadline_expired = 0
         self.shed = 0
@@ -399,6 +415,8 @@ class ContinuousBatchingEngine:
         if req.sampling.has_deadline:
             self._has_deadlines = True
         self.waiting.append(req)
+        if self.obs is not None:
+            self.obs.on_submit(req)
 
     # ----------------------------------------------- admission control --
     def estimated_queue_delay_s(self) -> float:
@@ -456,6 +474,8 @@ class ContinuousBatchingEngine:
         req.state.t_done = max(now, req.arrival_s)
         self.shed += 1
         self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+        if self.obs is not None:
+            self.obs.on_shed(req, reason)
 
     def try_add_request(self, req: Request, now: float) -> Optional[str]:
         """Admission-controlled enqueue: shed (returning the reason) or
@@ -474,16 +494,17 @@ class ContinuousBatchingEngine:
         the next run's metrics aren't polluted by compile-time samples.
         The prefix index keeps its *contents* (a warm cache is the point
         of a warmup) — only its counters reset."""
-        self.itl_samples = []
-        self.batch_samples = []
-        self.kv_fraction_samples = []
+        ml = self.ecfg.series_maxlen
+        self.itl_samples = BoundedSeries(ml)
+        self.batch_samples = BoundedSeries(ml)
+        self.kv_fraction_samples = BoundedSeries(ml)
         self.max_kv_fraction = 0.0
         self.preemptions = 0
         self.prefill_tokens_computed = 0
-        self.stall_samples = []
-        self.prefill_token_samples = []
-        self.decode_token_samples = []
-        self.preemption_samples = []
+        self.stall_samples = BoundedSeries(ml)
+        self.prefill_token_samples = BoundedSeries(ml)
+        self.decode_token_samples = BoundedSeries(ml)
+        self.preemption_samples = BoundedSeries(ml)
         self.deadline_expired = 0
         self.shed = 0
         self.shed_reasons = {}
@@ -514,6 +535,8 @@ class ContinuousBatchingEngine:
         self.pool.release(req.req_id)
         self._tokens.pop(req.req_id, None)
         self._pos.pop(req.req_id, None)
+        if self.obs is not None:
+            self.obs.on_finish(req, reason)
 
     def _finish_or_run(self, req: Request, t_done: float) -> bool:
         """Shared finish protocol for the just-produced last token: stop
@@ -544,6 +567,8 @@ class ContinuousBatchingEngine:
         stays on the same (possibly simulated) timeline as
         arrival_s/t_done and never goes negative."""
         req.state.t_first_token = max(now, self._now(now))
+        if self.obs is not None:
+            self.obs.on_first_token(req)
         if not self._finish_or_run(req, req.state.t_first_token):
             self.running.append(req)
 
@@ -683,6 +708,8 @@ class ContinuousBatchingEngine:
                     continue                # retry the same head request
                 break
             self.waiting.popleft()
+            if self.obs is not None:
+                self.obs.on_admit(req)
             if hit:
                 mgr.share(req.req_id, hit)
                 for b in hit:               # table ref replaces the pin
@@ -728,6 +755,28 @@ class ContinuousBatchingEngine:
             self.prefix.insert(req.prompt, self.pool.manager.tables[rid])
         self._post_prefill(req, now)
 
+    def _observed_call(self, req: Request, variant: str, fn, args: tuple,
+                       kw: dict, tokens: int, bucket: tuple):
+        """Run one jitted prefill-family call under the observer: census
+        its shape bucket (AOT-compiled once, cached — see
+        ``serving.obs.roofline``), time dispatch vs device completion,
+        and emit the compute span + roofline sample. Only reached when
+        ``self.obs`` is attached; obs-off paths call the jit directly.
+
+        ``bucket`` must carry every integer the call's traced shapes
+        derive from (the cheap cache key — see ``StepCensusCache.get``).
+        The census is taken *before* executing (``fn.lower`` must see the
+        donated pool buffer still alive on the chunked path)."""
+        obs = self.obs
+        sc = obs.census.get(variant, fn, args, kw, bucket=bucket)
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        t1 = time.perf_counter()
+        jax.block_until_ready(out)
+        t2 = time.perf_counter()
+        obs.on_prefill(req, variant, sc, t0, t1, t2, tokens)
+        return out
+
     def _prefill(self, req: Request, n_cached: int = 0):
         """Serial whole-prompt prefill: compute + write the KV; returns
         the last-position logits for :meth:`_complete_prefill`."""
@@ -746,9 +795,14 @@ class ContinuousBatchingEngine:
             nb_pad = _pow2_bucket(nb_cached, lo=1)
             prefix_kv = self.pool.gather_prefix(
                 self.pool.manager.tables[rid][:nb_cached], nb_pad)
-            logits, cache, _ = self._prefix_prefill_jit(
-                self.params, batch, prefix_kv, jnp.int32(n_cached),
-                cache_len=S)
+            args = (self.params, batch, prefix_kv, jnp.int32(n_cached))
+            kw = {"cache_len": S}
+            if self.obs is not None:
+                logits, cache, _ = self._observed_call(
+                    req, "prefix_prefill", self._prefix_prefill_jit,
+                    args, kw, tokens=sfx_len, bucket=(S, nb_pad))
+            else:
+                logits, cache, _ = self._prefix_prefill_jit(*args, **kw)
             self.pool.write_prefill(rid, cache, start_pos=n_cached)
         else:
             S = _bucket(req.prompt_len, self.ecfg.prefill_bucket)
@@ -760,8 +814,14 @@ class ContinuousBatchingEngine:
                 batch["img_embeds"] = jnp.zeros(
                     (1, self.cfg.n_img_tokens, self.cfg.d_model),
                     self.cfg.activation_dtype)
-            logits, cache, _ = self._prefill_jit(self.params, batch,
-                                                 cache_len=S)
+            args = (self.params, batch)
+            kw = {"cache_len": S}
+            if self.obs is not None:
+                logits, cache, _ = self._observed_call(
+                    req, "prefill", self._prefill_jit, args, kw,
+                    tokens=req.prompt_len, bucket=(S,))
+            else:
+                logits, cache, _ = self._prefill_jit(*args, **kw)
             self.pool.write_prefill(rid, cache)
         self.prefill_tokens_computed += req.prompt_len - n_cached
         return logits
@@ -849,8 +909,14 @@ class ContinuousBatchingEngine:
             # first chunk of an uncached prompt: plain prefill (identical
             # compute to the serial path when the chunk covers the whole
             # prompt — the bit-identity anchor) + token-granular write
-            logits, cache, _ = self._prefill_jit(self.params, batch,
-                                                 cache_len=S)
+            args = (self.params, batch)
+            kw = {"cache_len": S}
+            if self.obs is not None:
+                logits, cache, _ = self._observed_call(
+                    req, "prefill", self._prefill_jit, args, kw,
+                    tokens=chunk, bucket=(S,))
+            else:
+                logits, cache, _ = self._prefill_jit(*args, **kw)
             self.pool.write_prefill(rid, cache, start_pos=0, n_tokens=chunk)
         else:
             blocks = self.pool.manager.tables[rid]
@@ -858,10 +924,15 @@ class ContinuousBatchingEngine:
             table = np.full((nb_pad,), self.pool.trash_block, np.int32)
             table[:len(blocks)] = blocks
             nb_prefix = _pow2_bucket(-(-done // self.ecfg.block_size), lo=1)
-            logits, new_pool = self._chunk_prefill_jit(
-                self.params, self.pool.pool, jnp.asarray(table), batch,
-                jnp.int32(done), jnp.int32(chunk), cache_len=S,
-                nb_prefix=min(nb_prefix, nb_pad))
+            args = (self.params, self.pool.pool, jnp.asarray(table), batch,
+                    jnp.int32(done), jnp.int32(chunk))
+            kw = {"cache_len": S, "nb_prefix": min(nb_prefix, nb_pad)}
+            if self.obs is not None:
+                logits, new_pool = self._observed_call(
+                    req, "chunk_prefill", self._chunk_prefill_jit, args,
+                    kw, tokens=chunk, bucket=(S, nb_pad, kw["nb_prefix"]))
+            else:
+                logits, new_pool = self._chunk_prefill_jit(*args, **kw)
             self.pool.commit(new_pool)
         self.prefill_tokens_computed += chunk
         return logits
@@ -885,6 +956,8 @@ class ContinuousBatchingEngine:
         req.state.reset_for_requeue()
         self.waiting.appendleft(req)
         self.preemptions += 1
+        if self.obs is not None:
+            self.obs.on_preempt(req)
 
     def _ensure_step_capacity(self):
         """Make sure every running request can take this step's token.
@@ -960,6 +1033,9 @@ class ContinuousBatchingEngine:
                     self.pool.manager.used_fraction)
                 self.max_kv_fraction = max(self.max_kv_fraction,
                                            self.pool.manager.used_fraction)
+                if self.obs is not None:
+                    self.obs.end_step(self, t0=t0, t_sched_s=t_sched,
+                                      n_prefill=n_prefill, n_decode=0)
             return self.busy
         self._ensure_step_capacity()
         reqs = self.running                    # preemption may have shrunk it
@@ -1001,6 +1077,10 @@ class ContinuousBatchingEngine:
             if not self._finish_or_run(r, now + dt):
                 still.append(r)
         self.running = still
+        if self.obs is not None:
+            # last statement of the step: the host phase runs to here
+            self.obs.end_step(self, t0=t0, t_sched_s=t_sched,
+                              n_prefill=n_prefill, n_decode=len(reqs))
         return True
 
     # ------------------------------------------------------ decode paths --
@@ -1019,11 +1099,24 @@ class ContinuousBatchingEngine:
         tokens[:B] = [self._tokens[rid] for rid in rids]
         temp, top_k, top_p, seed = stack_sampling(
             [r.sampling for r in reqs], pad_to=batch_pad)
-        next_tokens, new_pool = self._paged_jit(
-            self.params, view.pool, view.tables, view.lengths,
-            view.positions, view.slots, jnp.asarray(tokens),
-            jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
-            jnp.asarray(seed))
+        args = (self.params, view.pool, view.tables, view.lengths,
+                view.positions, view.slots, jnp.asarray(tokens),
+                jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+                jnp.asarray(seed))
+        obs = self.obs
+        if obs is not None:
+            # census BEFORE the call — the pool arg is donated, so the
+            # AOT lowering must see the buffer while it is still alive
+            sc = obs.census.get("decode", self._paged_jit, args,
+                                bucket=(batch_pad, nb_pad))
+            t0 = time.perf_counter()
+            next_tokens, new_pool = self._paged_jit(*args)
+            t1 = time.perf_counter()
+            jax.block_until_ready((next_tokens, new_pool))
+            t2 = time.perf_counter()
+            obs.on_decode(sc, t0, t1, t2, batch=B)
+        else:
+            next_tokens, new_pool = self._paged_jit(*args)
         self.pool.commit(new_pool)
         return np.asarray(next_tokens)[:B]
 
@@ -1037,7 +1130,19 @@ class ContinuousBatchingEngine:
         view = self.pool.gather(rids, pad_blocks)
         tokens = jnp.asarray([self._tokens[rid] for rid in rids], jnp.int32)
         pos = jnp.asarray([self._pos[rid] for rid in rids], jnp.int32)
-        logits, new_cache = self._decode_jit(self.params, view, tokens, pos)
+        args = (self.params, view, tokens, pos)
+        obs = self.obs
+        if obs is not None:
+            sc = obs.census.get("decode_gather", self._decode_jit, args,
+                                bucket=(len(rids), pad_blocks))
+            t0 = time.perf_counter()
+            logits, new_cache = self._decode_jit(*args)
+            t1 = time.perf_counter()
+            jax.block_until_ready((logits, new_cache))
+            t2 = time.perf_counter()
+            obs.on_decode(sc, t0, t1, t2, batch=len(reqs))
+        else:
+            logits, new_cache = self._decode_jit(*args)
         self.pool.scatter_new_token(rids, [self._pos[r] for r in rids],
                                     new_cache)
         next_tokens = self._steps.sample(

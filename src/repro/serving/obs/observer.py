@@ -1,0 +1,339 @@
+"""The observability layer's engine-facing half.
+
+:class:`Observability` is the session-scoped facade: one
+:class:`~repro.serving.obs.trace.Tracer` (one timeline), one
+:class:`~repro.serving.obs.roofline.StepCensusCache` (co-located replicas
+share compiled buckets, so they share censuses), and one
+:class:`EngineObserver` per replica. Attach it to a bare engine, a
+:class:`~repro.serving.cluster.ReplicatedCluster`, or a
+:class:`~repro.serving.api.ServingAPI`; detached engines pay a single
+``self.obs is not None`` check per hook site — the always-on default
+stays free.
+
+:class:`EngineObserver` is the per-replica hook sink the engine calls:
+
+* lifecycle hooks (``on_submit`` / ``on_admit`` / ``on_prefill`` /
+  ``on_first_token`` / ``on_finish`` / ``on_preempt`` / ``on_shed``)
+  become request-thread trace spans and instants;
+* compute hooks (``on_prefill`` / ``on_decode``) carry the step variant's
+  compile-time census plus measured dispatch/device time into
+  :class:`~repro.serving.obs.roofline.LiveRoofline`;
+* ``end_step`` closes the per-step phase breakdown —
+  **schedule** (admission + prefill work before the decode launch, the
+  engine's existing stall term), **dispatch** (host time to launch the
+  decode jit), **device** (``block_until_ready`` on its outputs), and
+  **host** (everything else: token bookkeeping, finish protocol) — and
+  emits the replica's step span + KV/batch counter tracks.
+
+Every hook is wrapped in a tight "no observer attached" early return on
+the engine side, and the hooks themselves only append to bounded
+structures — cheap enough to leave enabled (``benchmarks/observability.py``
+pins the decode-step overhead at <= 5%).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.core.hardware import TPU_V5E, Hardware
+from repro.serving.obs.roofline import (LiveRoofline, StepCensus,
+                                        StepCensusCache)
+from repro.serving.obs.series import DEFAULT_SERIES_MAXLEN, BoundedSeries
+from repro.serving.obs.trace import DEFAULT_MAX_EVENTS, Tracer
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPhases:
+    """One engine step's time, attributed to its four phases (seconds).
+
+    ``schedule + dispatch + device + host == total`` up to clock
+    granularity; on a decode-less (prefill-only) step dispatch and device
+    are zero and the prefill work sits inside schedule.
+    """
+    step: int
+    schedule_s: float
+    dispatch_s: float
+    device_s: float
+    host_s: float
+    total_s: float
+
+
+class EngineObserver:
+    """Hook sink for one replica (``engine.obs``)."""
+
+    def __init__(self, parent: "Observability", pid: int,
+                 series_maxlen: int = DEFAULT_SERIES_MAXLEN):
+        self.parent = parent
+        self.pid = pid
+        self.trace: Tracer = parent.trace
+        self.census: StepCensusCache = parent.census
+        self.roofline = LiveRoofline(parent.hw, maxlen=series_maxlen)
+        self.phases: BoundedSeries = BoundedSeries(series_maxlen)
+        # request-thread timeline anchors (tracer seconds)
+        self._t_submit: Dict[int, float] = {}
+        self._t_decode: Dict[int, float] = {}
+        self._named: set = set()
+        # the decode compute hook's payload, consumed by end_step
+        self._decode_pending = None   # (sc, t0, t1, t2, batch)
+
+    # ------------------------------------------------------------ naming --
+    def _tid(self, req) -> int:
+        """Request lifecycle rows: tid = req_id + 1 (tid 0 = step track)."""
+        rid = req.req_id
+        tid = rid + 1
+        if rid not in self._named:
+            self._named.add(rid)
+            self.trace.name_thread(self.pid, tid, f"req {rid}")
+        return tid
+
+    # ------------------------------------------------- lifecycle hooks --
+    def on_submit(self, req):
+        self._t_submit[req.req_id] = self.trace.now()
+
+    def on_admit(self, req):
+        t = self.trace.now()
+        t0 = self._t_submit.pop(req.req_id, t)
+        self.trace.span("queued", t0, t, pid=self.pid, tid=self._tid(req),
+                        cat="lifecycle",
+                        args={"req": req.req_id,
+                              "arrival_s": req.arrival_s,
+                              "prompt_len": req.prompt_len})
+
+    def on_first_token(self, req):
+        t = self.trace.now()
+        self.trace.instant("first_token", t, pid=self.pid,
+                           tid=self._tid(req), cat="lifecycle",
+                           args={"req": req.req_id})
+        self._t_decode[req.req_id] = t
+
+    def on_finish(self, req, reason: str):
+        t = self.trace.now()
+        tid = self._tid(req)
+        t0 = self._t_decode.pop(req.req_id, None)
+        if t0 is not None:
+            self.trace.span("decode", t0, t, pid=self.pid, tid=tid,
+                            cat="lifecycle",
+                            args={"req": req.req_id,
+                                  "generated": req.state.generated})
+        self.trace.instant(f"finish:{reason}", t, pid=self.pid, tid=tid,
+                           cat="lifecycle", args={"req": req.req_id})
+        self._t_submit.pop(req.req_id, None)
+
+    def on_preempt(self, req):
+        # recompute-preemption: the decode span (if any) ends here and the
+        # request re-enters the queue — the next admit opens a fresh
+        # queued span from this instant
+        t = self.trace.now()
+        tid = self._tid(req)
+        t0 = self._t_decode.pop(req.req_id, None)
+        if t0 is not None:
+            self.trace.span("decode", t0, t, pid=self.pid, tid=tid,
+                            cat="lifecycle", args={"req": req.req_id,
+                                                   "preempted": True})
+        self.trace.instant("preempt", t, pid=self.pid, tid=tid,
+                           cat="lifecycle", args={"req": req.req_id})
+        self._t_submit[req.req_id] = t
+
+    def on_shed(self, req, reason: str):
+        self.trace.instant("shed", self.trace.now(), pid=self.pid,
+                           tid=self._tid(req), cat="lifecycle",
+                           args={"req": req.req_id, "reason": reason})
+        self._t_submit.pop(req.req_id, None)
+
+    def event(self, name: str, args: Optional[dict] = None, *,
+              tid: int = 0, cat: str = "cluster"):
+        """Generic instant on this replica's track (cluster-level events:
+        redrive / quarantine / respawn / watchdog)."""
+        self.trace.instant(name, self.trace.now(), pid=self.pid, tid=tid,
+                           cat=cat, args=args)
+
+    # --------------------------------------------------- compute hooks --
+    def on_prefill(self, req, variant: str, sc: Optional[StepCensus],
+                   t0: float, t1: float, t2: float, tokens: int):
+        """One prefill compute call (serial / prefix / chunk).
+
+        ``t0``/``t1``/``t2`` are raw ``perf_counter`` stamps: call start,
+        dispatch return, outputs ready. Emits the compute span on the
+        request's lifecycle row and records a roofline sample (prefill
+        variants get attributed exactly like decode steps — the paper's
+        compute-bound counterpoint to the memory-bound decode)."""
+        e = self.trace.epoch
+        self.trace.span(variant, t0 - e, t2 - e, pid=self.pid,
+                        tid=self._tid(req), cat="compute",
+                        args={"req": req.req_id, "tokens": tokens,
+                              "dispatch_us": (t1 - t0) * 1e6})
+        self.roofline.record(step=0, sc=sc, device_s=t2 - t1, batch=tokens,
+                             variant=variant)
+
+    def on_decode(self, sc: Optional[StepCensus], t0: float, t1: float,
+                  t2: float, batch: int):
+        """The decode jit call just ran: stash its census + timing for
+        this step's ``end_step`` (which owns the step/roofline emit)."""
+        self._decode_pending = (sc, t0, t1, t2, batch)
+
+    # --------------------------------------------------------- end step --
+    def end_step(self, eng, t0: float, t_sched_s: float, n_prefill: int,
+                 n_decode: int):
+        """Close one engine step: phase breakdown, step span, counters,
+        and the decode roofline sample. ``t0`` is the raw ``perf_counter``
+        stamp the engine's step timer started at; ``t_sched_s`` the
+        schedule phase it already measured (its stall term)."""
+        t_end = time.perf_counter()
+        e = self.trace.epoch
+        total_s = t_end - t0
+        dispatch_s = device_s = 0.0
+        pend = self._decode_pending
+        if pend is not None:
+            sc, d0, d1, d2, batch = pend
+            self._decode_pending = None
+            dispatch_s, device_s = d1 - d0, d2 - d1
+            self.roofline.record(step=eng.step_count, sc=sc,
+                                 device_s=device_s, batch=batch,
+                                 variant="decode")
+            self.trace.span("dispatch", d0 - e, d1 - e, pid=self.pid,
+                            cat="phase")
+            self.trace.span("device", d1 - e, d2 - e, pid=self.pid,
+                            cat="phase")
+            self.trace.span("host", d2 - e, t_end - e, pid=self.pid,
+                            cat="phase")
+        host_s = max(total_s - t_sched_s - dispatch_s - device_s, 0.0)
+        self.phases.append(StepPhases(
+            step=eng.step_count, schedule_s=t_sched_s,
+            dispatch_s=dispatch_s, device_s=device_s, host_s=host_s,
+            total_s=total_s))
+        self.trace.span("schedule", t0 - e, t0 - e + t_sched_s,
+                        pid=self.pid, cat="phase")
+        self.trace.span(f"step {eng.step_count}", t0 - e, t_end - e,
+                        pid=self.pid, cat="step",
+                        args={"step": eng.step_count, "decode": n_decode,
+                              "prefill_tokens": n_prefill})
+        t_now = t_end - e
+        self.trace.counter("kv_used_fraction", t_now,
+                           {"used": eng.pool.manager.used_fraction},
+                           pid=self.pid)
+        self.trace.counter("batch", t_now,
+                           {"decoding": n_decode,
+                            "prefilling": len(eng.prefilling),
+                            "waiting": len(eng.waiting)},
+                           pid=self.pid)
+
+    # ----------------------------------------------------------- views --
+    def phase_summary(self) -> dict:
+        """Mean seconds per phase over retained steps + the host-gap
+        fraction (host + dispatch over total — the paper's host
+        bottleneck indicator, live)."""
+        n = len(self.phases)
+        if n == 0:
+            return {"steps": 0, "schedule_s": 0.0, "dispatch_s": 0.0,
+                    "device_s": 0.0, "host_s": 0.0, "total_s": 0.0,
+                    "host_gap_fraction": 0.0}
+        tot = sum(p.total_s for p in self.phases)
+        mean = lambda f: sum(f(p) for p in self.phases) / n  # noqa: E731
+        host = sum(p.host_s + p.dispatch_s for p in self.phases)
+        return {"steps": self.phases.appended,
+                "schedule_s": mean(lambda p: p.schedule_s),
+                "dispatch_s": mean(lambda p: p.dispatch_s),
+                "device_s": mean(lambda p: p.device_s),
+                "host_s": mean(lambda p: p.host_s),
+                "total_s": mean(lambda p: p.total_s),
+                "host_gap_fraction": host / max(tot, 1e-12)}
+
+    def summary(self) -> dict:
+        return {"replica": self.pid,
+                "phases": self.phase_summary(),
+                "roofline": self.roofline.summary(),
+                "decode": self.roofline.summary("decode")}
+
+
+class Observability:
+    """Session-scoped observability: tracer + census cache + per-replica
+    observers, and the export entry points.
+
+    ::
+
+        obs = Observability(hw=H100_PAPER)
+        obs.attach(engine)              # or obs.attach_cluster(cluster)
+        engine.run(reqs)
+        obs.export_chrome_trace("trace.json")
+        print(obs.summary())
+    """
+
+    def __init__(self, hw: Optional[Hardware] = None, *,
+                 series_maxlen: int = DEFAULT_SERIES_MAXLEN,
+                 max_events: int = DEFAULT_MAX_EVENTS):
+        self.hw = hw or TPU_V5E
+        self.trace = Tracer(max_events=max_events)
+        self.census = StepCensusCache()
+        self.series_maxlen = series_maxlen
+        self.observers: Dict[int, EngineObserver] = {}
+
+    # ------------------------------------------------------------ attach --
+    def attach(self, engine, pid: Optional[int] = None) -> EngineObserver:
+        """Attach to one engine (idempotent per replica id): the engine's
+        ``obs`` hook slot is pointed at this session's observer for its
+        replica, so a respawned engine re-attaches to the same rows."""
+        pid = engine.replica_id if pid is None else pid
+        ob = self.observers.get(pid)
+        if ob is None:
+            ob = EngineObserver(self, pid, self.series_maxlen)
+            self.observers[pid] = ob
+            self.trace.name_process(pid, f"replica{pid}")
+            self.trace.name_thread(pid, 0, "engine steps")
+        engine.obs = ob
+        return ob
+
+    def attach_cluster(self, cluster) -> "Observability":
+        cluster.obs = self
+        for rep in cluster.replicas:
+            self.attach(rep.engine, rep.idx)
+        return self
+
+    def attach_backend(self, backend) -> "Observability":
+        """Attach to whatever a :class:`~repro.serving.api.ServingAPI`
+        wraps (engine or cluster), duck-typed on ``replicas``."""
+        if hasattr(backend, "replicas"):
+            return self.attach_cluster(backend)
+        self.attach(backend)
+        return self
+
+    def observer(self, pid: int = 0) -> Optional[EngineObserver]:
+        return self.observers.get(pid)
+
+    def replica_event(self, pid: int, name: str,
+                      args: Optional[dict] = None):
+        """Cluster-level instant on a replica's step track (redrive /
+        quarantine / respawn / watchdog / evict) — no-op for a replica
+        that was never attached."""
+        ob = self.observers.get(pid)
+        if ob is not None:
+            ob.event(name, args)
+
+    # ----------------------------------------------------------- export --
+    def export_chrome_trace(self, path: str) -> str:
+        """Write the session trace as Chrome-trace/Perfetto JSON."""
+        return self.trace.export_chrome_trace(path)
+
+    def summary(self) -> dict:
+        """Per-replica phase + roofline summaries, plus census stats."""
+        return {
+            "hardware": self.hw.name,
+            "replicas": {pid: ob.summary()
+                         for pid, ob in sorted(self.observers.items())},
+            "census": {"compiles": self.census.compiles,
+                       "errors": len(self.census.errors)},
+            "trace": {"events": self.trace.n_events,
+                      "dropped": self.trace.dropped},
+        }
+
+    def roofline_rows(self) -> List[str]:
+        """Printable per-replica live-roofline lines."""
+        out = []
+        for pid, ob in sorted(self.observers.items()):
+            s = ob.roofline.summary("decode")
+            out.append(
+                f"replica {pid}: decode steps={s['steps']} "
+                f"bw_util={s['bw_util_mean'] * 100:.1f}% "
+                f"mfu={s['mfu_mean'] * 100:.2f}% "
+                f"ai={s['ai_mean']:.1f} flop/B bound={s['bound']}")
+        return out

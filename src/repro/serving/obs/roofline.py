@@ -1,0 +1,220 @@
+"""Per-step roofline attribution — the paper's offline Nsight-style
+analysis (`core.analysis.HloCensus` -> `core.roofline.RooflineReport`)
+turned into in-band runtime telemetry.
+
+How it works:
+
+* **At compile time** (`StepCensusCache`): the first time a jitted step
+  variant executes for a given shape bucket — decode, chunked prefill,
+  prefix prefill, serial prefill, each per (batch, table, chunk) bucket
+  — the same function is AOT-lowered and compiled (`fn.lower(*args)
+  .compile()`) and the existing :class:`~repro.core.analysis.HloCensus`
+  runs over its optimized HLO, yielding the *exact* FLOPs and HBM bytes
+  of that XLA program, per kernel class. The census is cached by
+  (function, shape signature), so steady-state steps pay two dict
+  lookups; the one-time AOT compile rides the same compile event that
+  bucketing already amortizes.
+* **At run time** (`LiveRoofline`): every executed step is tagged with
+  its bucket's census and its measured device time, producing a live
+  series of achieved-vs-peak bandwidth, compute utilization (MFU),
+  arithmetic intensity, and a memory-/compute-bound verdict — the same
+  quantities ``benchmarks/roofline_table.py`` derives offline, now per
+  served step. :meth:`LiveRoofline.report` folds a variant's census
+  back through :func:`repro.core.roofline.roofline_report`, so the live
+  and offline paths share one formula and can be cross-checked
+  numerically (``benchmarks/observability.py`` asserts agreement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.analysis import OpCensus
+from repro.core.hardware import Hardware
+from repro.core.roofline import RooflineReport, roofline_report
+from repro.serving.obs.series import DEFAULT_SERIES_MAXLEN, BoundedSeries
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCensus:
+    """One jitted step variant's compile-time cost census."""
+    variant: str                 # "decode" / "chunk_prefill" / ...
+    key: Tuple                   # shape-bucket signature (cache key tail)
+    census: OpCensus             # per-kernel-class FLOPs / bytes
+
+    @property
+    def flops(self) -> float:
+        return self.census.flops
+
+    @property
+    def bytes(self) -> float:
+        return self.census.bytes
+
+    @property
+    def ai(self) -> float:
+        """Arithmetic intensity of the whole step (FLOP / HBM byte)."""
+        return self.census.flops / max(self.census.bytes, 1.0)
+
+
+def _signature(args, kwargs) -> Tuple:
+    """Hashable shape/dtype signature of a concrete call — two calls with
+    the same signature hit the same XLA executable, so they share one
+    census."""
+    import jax
+
+    sig = []
+    for leaf in jax.tree_util.tree_leaves((args, kwargs)):
+        shape = getattr(leaf, "shape", None)
+        if shape is not None:
+            sig.append((tuple(shape), str(getattr(leaf, "dtype", ""))))
+        else:
+            sig.append((type(leaf).__name__, repr(leaf)))
+    return tuple(sig)
+
+
+class StepCensusCache:
+    """Lazy per-(function, bucket) HLO census.
+
+    Shared across co-located replicas (they share ``StepFunctions``, so
+    their buckets key identically). A variant whose AOT lowering fails
+    (exotic backend, tracing quirk) is cached as ``None`` — attribution
+    degrades to timing-only for that variant instead of raising in the
+    serving hot loop; the failure is kept in ``errors`` for inspection.
+    """
+
+    def __init__(self):
+        self._cache: Dict[Tuple, Optional[StepCensus]] = {}
+        self.errors: Dict[Tuple, str] = {}
+        self.compiles = 0           # AOT compiles actually performed
+
+    def get(self, variant: str, fn, args: tuple,
+            static_kwargs: Optional[dict] = None, *,
+            bucket: Optional[Tuple] = None) -> Optional[StepCensus]:
+        """``bucket`` is an optional caller-supplied shape-bucket key
+        (e.g. ``(batch_pad, nb_pad)``): the engine already knows the
+        handful of integers every traced shape derives from, and hashing
+        them is ~100x cheaper than walking the full args pytree — the
+        difference between the hot-path hit costing microseconds and
+        costing a visible slice of a CPU decode step. Callers must pass
+        every value the executable's shapes depend on; omitted, the full
+        tree signature is used."""
+        static_kwargs = static_kwargs or {}
+        key = (variant, id(fn),
+               bucket if bucket is not None
+               else _signature(args, static_kwargs))
+        hit = self._cache.get(key, _MISS)
+        if hit is not _MISS:
+            return hit
+        sc: Optional[StepCensus] = None
+        try:
+            from repro.core.analysis import HloCensus
+            compiled = fn.lower(*args, **static_kwargs).compile()
+            self.compiles += 1
+            sc = StepCensus(variant=variant, key=key[2:],
+                            census=HloCensus(compiled.as_text()).census())
+        except Exception as e:          # never break serving for telemetry
+            self.errors[key] = f"{type(e).__name__}: {e}"
+        self._cache[key] = sc
+        return sc
+
+
+_MISS = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineSample:
+    """One executed step, attributed: what it moved, what it achieved."""
+    step: int
+    variant: str
+    batch: int                   # decoded requests (or prefill tokens)
+    device_s: float
+    flops: float
+    bytes: float
+
+    def bw_util(self, hw: Hardware) -> float:
+        """Achieved HBM bandwidth / peak (the paper's DRAM saturation)."""
+        if self.device_s <= 0:
+            return 0.0
+        return (self.bytes / self.device_s) / hw.hbm_bw
+
+    def compute_util(self, hw: Hardware) -> float:
+        """Achieved FLOP/s over peak — MFU of this step's HLO FLOPs."""
+        if self.device_s <= 0:
+            return 0.0
+        return (self.flops / self.device_s) / hw.peak_flops
+
+    @property
+    def ai(self) -> float:
+        return self.flops / max(self.bytes, 1.0)
+
+    def bound(self, hw: Hardware) -> str:
+        """Roofline verdict: which term bounds this step's HLO."""
+        return ("memory" if self.bytes / hw.hbm_bw
+                >= self.flops / hw.peak_flops else "compute")
+
+
+class LiveRoofline:
+    """Per-step attribution series + aggregate view for one replica."""
+
+    def __init__(self, hw: Hardware,
+                 maxlen: int = DEFAULT_SERIES_MAXLEN):
+        self.hw = hw
+        self.samples: BoundedSeries = BoundedSeries(maxlen)
+        # census of the most recent bucket per variant (offline cross-check
+        # anchor) + verdict tally over ALL steps (not just retained ones)
+        self.latest: Dict[str, StepCensus] = {}
+        self.bound_counts: Dict[str, int] = {}
+
+    def record(self, step: int, sc: Optional[StepCensus], device_s: float,
+               batch: int, variant: str):
+        if sc is None:                   # census unavailable: timing-only
+            self.samples.append(RooflineSample(
+                step=step, variant=variant, batch=batch,
+                device_s=device_s, flops=0.0, bytes=0.0))
+            return
+        sample = RooflineSample(step=step, variant=sc.variant, batch=batch,
+                                device_s=device_s, flops=sc.flops,
+                                bytes=sc.bytes)
+        self.latest[sc.variant] = sc
+        verdict = sample.bound(self.hw)
+        self.bound_counts[verdict] = self.bound_counts.get(verdict, 0) + 1
+        self.samples.append(sample)
+
+    # -------------------------------------------------------- aggregate --
+    def variant_samples(self, variant: str) -> List[RooflineSample]:
+        return [s for s in self.samples if s.variant == variant]
+
+    def summary(self, variant: Optional[str] = None) -> dict:
+        """Mean achieved bandwidth / MFU / AI and the verdict histogram —
+        the live analogue of one ``roofline_table.py`` row."""
+        samples = (self.variant_samples(variant) if variant
+                   else list(self.samples))
+        attributed = [s for s in samples if s.bytes > 0]
+        n = len(attributed)
+        mean = lambda f: sum(f(s) for s in attributed) / n if n else 0.0  # noqa: E731
+        return {
+            "hardware": self.hw.name,
+            "steps": len(samples),
+            "attributed_steps": n,
+            "bw_util_mean": mean(lambda s: s.bw_util(self.hw)),
+            "mfu_mean": mean(lambda s: s.compute_util(self.hw)),
+            "ai_mean": mean(lambda s: s.ai),
+            "device_s_mean": (sum(s.device_s for s in samples) / len(samples)
+                              if samples else 0.0),
+            "bound_counts": dict(self.bound_counts),
+            "bound": (max(self.bound_counts, key=self.bound_counts.get)
+                      if self.bound_counts else "unknown"),
+        }
+
+    def report(self, variant: str = "decode", *,
+               arch: str = "", mesh: str = "live") -> Optional[RooflineReport]:
+        """The live census folded through the *offline* roofline formula
+        (:func:`repro.core.roofline.roofline_report`) — one shared code
+        path, so live and offline attribution can only diverge if the
+        wiring is wrong (that is what ``benchmarks/observability.py``
+        checks)."""
+        sc = self.latest.get(variant)
+        if sc is None:
+            return None
+        return roofline_report(sc.census, self.hw, arch=arch,
+                               shape=variant, mesh=mesh)

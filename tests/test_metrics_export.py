@@ -1,0 +1,164 @@
+"""Metrics export: JSON round-trip fidelity (Percentiles, PrefixStats,
+per-replica stats, the robustness counters), Prometheus text exposition +
+lint, registry coverage, and loud failures on unknown schemas."""
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model, init_params
+from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                           FaultInjector, ReplicatedCluster, StepFunctions,
+                           lint_prometheus, metrics_from_json,
+                           metrics_to_json, prometheus_text,
+                           shared_prefix_workload, sharegpt_like)
+from repro.serving.cluster.metrics import ClusterMetrics
+from repro.serving.metrics import Percentiles, ServingMetrics
+from repro.serving.obs.export import (CLUSTER_SPECS, SERVING_SPECS,
+                                      _resolve)
+
+
+@pytest.fixture(scope="module")
+def setup(rules):
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    steps = StepFunctions.build(model, 8)
+    return cfg, params, model, steps
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=4, block_size=8, kv_pool_tokens=4096,
+                max_model_len=128, prefill_bucket=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def serving_metrics(setup):
+    """A real run with the prefix cache on, so PrefixStats is attached."""
+    cfg, params, model, steps = setup
+    eng = ContinuousBatchingEngine(model, params,
+                                   _ecfg(prefix_cache=True), steps=steps)
+    reqs = shared_prefix_workload(2, 2, cfg.vocab_size, prefix_len=32,
+                                  suffix_len=8, max_new_tokens=6, seed=5)
+    return eng.run(reqs)
+
+
+@pytest.fixture(scope="module")
+def cluster_metrics(setup):
+    """A real faulted cluster run: the PR 6 robustness counters are live
+    (faults/redriven/availability), not defaulted."""
+    cfg, params, model, _ = setup
+    faults = FaultInjector.parse("replica=1,step=3")
+    cluster = ReplicatedCluster.colocated(model, params, _ecfg(), 2,
+                                          policy="round-robin", mode="sync",
+                                          faults=faults)
+    reqs = sharegpt_like(6, cfg.vocab_size, seed=3, mean_in=12,
+                         mean_out=8, max_len=48, sigma=0.4)
+    return cluster.run(reqs)
+
+
+# ------------------------------------------------------- JSON round-trip --
+def test_serving_metrics_roundtrip(serving_metrics, tmp_path):
+    m = serving_metrics
+    assert m.prefix is not None and m.prefix.hit_tokens > 0
+    doc = metrics_to_json(m)
+    got = metrics_from_json(doc)                       # dict form
+    assert isinstance(got, ServingMetrics)
+    assert dataclasses.asdict(got) == dataclasses.asdict(m)
+    assert isinstance(got.itl, Percentiles) and got.itl == m.itl
+    assert got.prefix.hit_rate == m.prefix.hit_rate
+
+    got2 = metrics_from_json(json.dumps(doc))          # string form
+    assert dataclasses.asdict(got2) == dataclasses.asdict(m)
+
+    path = tmp_path / "m.json"
+    path.write_text(json.dumps(doc))
+    got3 = metrics_from_json(str(path))                # file form
+    assert dataclasses.asdict(got3) == dataclasses.asdict(m)
+
+
+def test_cluster_metrics_roundtrip_with_robustness(cluster_metrics):
+    m = cluster_metrics
+    assert m.faults == 1 and m.redriven > 0            # counters are live
+    got = metrics_from_json(metrics_to_json(m))
+    assert isinstance(got, ClusterMetrics)
+    assert dataclasses.asdict(got) == dataclasses.asdict(m)
+    assert got.faults == m.faults and got.redriven == m.redriven
+    assert got.availability == m.availability
+    assert got.watchdog_trips == m.watchdog_trips
+    # per-replica ServingMetrics come back as real dataclasses
+    assert all(isinstance(rs.metrics, ServingMetrics)
+               for rs in got.per_replica)
+    assert all(isinstance(rs.metrics.ttft, Percentiles)
+               for rs in got.per_replica)
+
+
+def test_metrics_from_json_fails_loudly():
+    with pytest.raises(ValueError, match="schema"):
+        metrics_from_json({"schema": "bogus/v9", "type": "ServingMetrics",
+                           "data": {}})
+    with pytest.raises(ValueError, match="type"):
+        metrics_from_json({"schema": "repro.serving.metrics/v1",
+                           "type": "Mystery", "data": {}})
+    with pytest.raises(TypeError):
+        metrics_to_json({"not": "a metrics object"})
+
+
+# ----------------------------------------------------------- Prometheus --
+def test_prometheus_serving_exposition(serving_metrics):
+    text = prometheus_text(serving_metrics)
+    assert lint_prometheus(text) == []
+    assert "# TYPE repro_tokens_total counter" in text
+    assert 'repro_itl_seconds{quantile="0.95"}' in text
+    assert "repro_prefix_hit_rate" in text             # prefix cache was on
+
+
+def test_prometheus_cluster_exposition(cluster_metrics):
+    text = prometheus_text(cluster_metrics)
+    assert lint_prometheus(text) == []
+    assert "repro_cluster_faults_total 1" in text
+    assert "repro_cluster_redriven_total" in text
+    # replica-labeled serving samples survive the aggregation
+    assert 'replica="0"' in text and 'replica="1"' in text
+    with pytest.raises(TypeError):
+        prometheus_text({"not": "metrics"})
+
+
+def test_lint_catches_malformed_exposition():
+    assert lint_prometheus("va lue{ 1.0\n")            # bad sample line
+    assert lint_prometheus("# TYPE x flavor\nx 1\n")   # bad TYPE
+    assert lint_prometheus('m{a=unquoted} 1\n')        # bad label
+    assert lint_prometheus("m nope\n")                 # non-numeric value
+    assert lint_prometheus("") == []
+
+
+# -------------------------------------------------------------- registry --
+def test_registry_covers_all_spec_paths(serving_metrics, cluster_metrics):
+    """Every registry path resolves on a real metrics object — a renamed
+    dataclass field breaks here, not silently in the exposition."""
+    for spec in SERVING_SPECS:
+        _resolve(serving_metrics, spec.path)           # must not raise
+    for spec in CLUSTER_SPECS:
+        _resolve(cluster_metrics, spec.path)
+
+
+def test_registry_covers_robustness_counters():
+    cluster_paths = {s.path for s in CLUSTER_SPECS}
+    for field in ("faults", "redriven", "lost", "shed", "deadline_expired",
+                  "watchdog_trips", "availability"):
+        assert field in cluster_paths, f"{field} missing from registry"
+    serving_paths = {s.path for s in SERVING_SPECS}
+    for field in ("preemptions", "shed", "deadline_expired",
+                  "queued_aborts", "shed_reasons"):
+        assert field in serving_paths, f"{field} missing from registry"
+
+
+def test_registry_names_unique():
+    names = [s.name for s in SERVING_SPECS + CLUSTER_SPECS]
+    assert len(names) == len(set(names))
+    kinds = {s.kind for s in SERVING_SPECS + CLUSTER_SPECS}
+    assert kinds <= {"counter", "gauge", "summary", "labeled"}

@@ -1,0 +1,218 @@
+"""Observability layer: bounded series, Chrome-trace writer + validator,
+engine/cluster hook wiring (phases, live roofline, census cache),
+no-effect-on-outputs invariance, and the periodic metrics emitter."""
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model, init_params
+from repro.serving import (BoundedSeries, ContinuousBatchingEngine,
+                           EngineConfig, FaultInjector, MetricsEmitter,
+                           Observability, ReplicatedCluster, StepFunctions,
+                           Tracer, shared_prefix_workload, sharegpt_like,
+                           validate_chrome_trace)
+
+
+@pytest.fixture(scope="module")
+def setup(rules):
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    steps = StepFunctions.build(model, 8)
+    return cfg, params, model, steps
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=4, block_size=8, kv_pool_tokens=4096,
+                max_model_len=128, prefill_bucket=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _engine(setup, **kw):
+    _, params, model, steps = setup
+    return ContinuousBatchingEngine(model, params, _ecfg(**kw), steps=steps)
+
+
+def _wl(cfg, n=4, seed=3, mean_out=8):
+    return sharegpt_like(n, cfg.vocab_size, seed=seed, mean_in=12,
+                         mean_out=mean_out, max_len=48, sigma=0.4)
+
+
+def _outputs(reqs):
+    return [list(r.output_tokens) for r in reqs]
+
+
+# ---------------------------------------------------------- BoundedSeries --
+def test_bounded_series_below_cap_keeps_everything():
+    s = BoundedSeries(16)
+    for i in range(16):
+        s.append(i)
+    assert list(s) == list(range(16))
+    assert s.appended == 16 and s.stride == 1
+
+
+def test_bounded_series_decimates_above_cap():
+    s = BoundedSeries(8)
+    n = 1000
+    for i in range(n):
+        s.append(i)
+    assert len(s) <= 8
+    assert s.appended == n
+    assert s.stride > 1
+    # uniform whole-run coverage, not a tail window: retained points are
+    # stride-spaced from the beginning of the run
+    assert s[0] == 0
+    assert list(s) == list(range(0, n, s.stride))[:len(s)]
+
+
+def test_bounded_series_validation_and_fresh():
+    with pytest.raises(ValueError):
+        BoundedSeries(1)
+    s = BoundedSeries(4)
+    for i in range(100):
+        s.append(i)
+    f = s.fresh()
+    assert f.maxlen == 4 and len(f) == 0 and f.stride == 1
+
+
+def test_engine_series_are_bounded(setup):
+    cfg = setup[0]
+    eng = _engine(setup, series_maxlen=4)
+    m = eng.run(_wl(cfg, n=6, mean_out=12))
+    assert isinstance(eng.itl_samples, BoundedSeries)
+    assert len(eng.itl_samples) <= 4
+    assert eng.itl_samples.appended > 4          # the run outgrew the cap
+    assert m.itl_s > 0 and m.itl.p50 > 0         # metrics still computed
+    with pytest.raises(ValueError, match="series_maxlen"):
+        _ecfg(series_maxlen=1)
+
+
+# ----------------------------------------------------------------- Tracer --
+def test_tracer_chrome_trace_structure(tmp_path):
+    tr = Tracer()
+    tr.name_process(0, "replica0")
+    tr.name_thread(0, 0, "engine steps")
+    t = tr.now()
+    tr.span("step 1", t, t + 1e-3, pid=0, cat="step")
+    tr.instant("first_token", t + 5e-4, pid=0, tid=3)
+    tr.counter("kv", t + 1e-3, {"used": 0.5}, pid=0)
+    path = str(tmp_path / "trace.json")
+    tr.export_chrome_trace(path)
+    assert validate_chrome_trace(path) == []
+    doc = json.load(open(path))
+    phs = {e["ph"] for e in doc["traceEvents"]}
+    assert {"X", "i", "C", "M"} <= phs
+
+
+def test_tracer_bounded_and_validator_catches_garbage():
+    tr = Tracer(max_events=4)
+    for i in range(10):
+        tr.instant(f"e{i}", float(i))
+    assert tr.n_events <= 4 and tr.dropped == 6
+    bad = {"traceEvents": [{"ph": "X", "name": "no-dur", "ts": 1.0,
+                            "pid": 0, "tid": 0}]}
+    assert validate_chrome_trace(bad)            # missing dur reported
+
+
+# -------------------------------------------------------- engine wiring --
+def test_engine_obs_phases_roofline_census(setup, tmp_path):
+    cfg = setup[0]
+    obs = Observability()
+    eng = _engine(setup)
+    obs.attach(eng)
+    eng.run(_wl(cfg, n=4, mean_out=8))
+
+    ob = obs.observer(0)
+    assert ob is not None and len(ob.phases) > 0
+    p = ob.phases[-1]
+    total = p.schedule_s + p.dispatch_s + p.device_s + p.host_s
+    assert total == pytest.approx(p.total_s, rel=0.05, abs=1e-4)
+
+    assert obs.census.compiles > 0 and not obs.census.errors
+    dec = ob.roofline.variant_samples("decode")
+    assert dec and all(s.flops > 0 and s.bytes > 0 for s in dec)
+    s = ob.roofline.summary("decode")
+    assert 0 < s["bw_util_mean"] and s["bound"] in ("memory", "compute")
+    rep = ob.roofline.report("decode")
+    assert rep is not None and rep.memory_s > 0
+
+    path = str(tmp_path / "t.json")
+    obs.export_chrome_trace(path)
+    assert validate_chrome_trace(path) == []
+    names = {e["name"] for e in json.load(open(path))["traceEvents"]}
+    assert {"queued", "decode", "first_token", "schedule",
+            "dispatch", "device", "host"} <= names
+
+
+def test_obs_attached_outputs_bit_identical(setup):
+    # same engine config, same workload, observer on vs off: identical
+    cfg = setup[0]
+    base = _wl(cfg, n=4, mean_out=8)
+    again = _wl(cfg, n=4, mean_out=8)
+    e1, e2 = _engine(setup), _engine(setup)
+    Observability().attach(e2)
+    e1.run(base)
+    e2.run(again)
+    assert _outputs(base) == _outputs(again)
+
+
+def test_obs_covers_chunked_and_prefix_variants(setup):
+    cfg = setup[0]
+    obs = Observability()
+    eng = _engine(setup, prefix_cache=True, prefill_chunk_tokens=16)
+    obs.attach(eng)
+    reqs = shared_prefix_workload(2, 2, cfg.vocab_size, prefix_len=32,
+                                  suffix_len=8, max_new_tokens=6, seed=5)
+    eng.run(reqs)
+    variants = {v for (v, _, _) in obs.census._cache}
+    assert "decode" in variants and "prefill" in variants
+    # prefix hits and later chunks exercise the other two entry points
+    assert variants & {"prefix_prefill", "chunk_prefill"}
+
+
+# ------------------------------------------------------- cluster wiring --
+def test_cluster_attach_and_fault_events(setup):
+    cfg, params, model, _ = setup
+    faults = FaultInjector.parse("replica=1,step=3")
+    cluster = ReplicatedCluster.colocated(model, params, _ecfg(), 2,
+                                          policy="round-robin", mode="sync",
+                                          faults=faults)
+    obs = Observability()
+    obs.attach_cluster(cluster)
+    assert cluster.obs is obs and set(obs.observers) == {0, 1}
+    m = cluster.run(_wl(cfg, n=6, mean_out=8))
+    assert m.faults == 1 and m.completed == 6
+    names = {e["name"] for e in obs.trace.to_dict()["traceEvents"]}
+    assert "quarantine" in names and "redrive" in names
+    assert validate_chrome_trace(obs.trace.to_dict()) == []
+
+
+# ----------------------------------------------------------- emitter ----
+def test_metrics_emitter_tick_gating(setup, tmp_path):
+    cfg = setup[0]
+    eng = _engine(setup)
+    m = eng.run(_wl(cfg, n=2, mean_out=4))
+    path = str(tmp_path / "m.json")
+    em = MetricsEmitter(path, interval_s=10.0)
+    calls = []
+
+    def provider():
+        calls.append(1)
+        return m
+
+    assert em.tick(0.0, provider) is True        # first tick emits
+    assert em.tick(5.0, provider) is False       # not due: provider unpaid
+    assert em.tick(10.0, provider) is True
+    assert len(calls) == 2 and em.emits == 2
+    from repro.serving import metrics_from_json
+    got = metrics_from_json(path)
+    assert got.total_tokens == m.total_tokens
+    em.close(m)
+    assert em.emits == 3
+    with pytest.raises(ValueError):
+        MetricsEmitter(fmt="xml")
+    with pytest.raises(ValueError):
+        MetricsEmitter(interval_s=0.0)
