@@ -24,7 +24,10 @@ from benchmarks.roofline_table import load_records
 
 # every BENCH_*.json the benchmark suite is expected to have written;
 # grows with each PR that adds a benchmarks/<name>.py artifact
-REQUIRED_BENCHES = ("BENCH_faults.json", "BENCH_obs.json")
+REQUIRED_BENCHES = ("BENCH_faults.json", "BENCH_obs.json",
+                    "BENCH_memgap.json")
+
+HISTORY_NAME = "BENCH_history.jsonl"
 
 
 def fmt_case(r):
@@ -139,6 +142,62 @@ def bench_failures(benches: Dict[str, Dict]) -> List[str]:
             for k, v in doc.items() if k.startswith("claim_") and not v]
 
 
+# --------------------------------------------------- cross-run history --
+def load_history(dirname: str = "experiments/paper") -> List[Dict]:
+    """Read the JSONL trajectory benchmarks/run.py appends to."""
+    path = os.path.join(dirname, HISTORY_NAME)
+    if not os.path.exists(path):
+        return []
+    runs: List[Dict] = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                runs.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"{path}:{i + 1} is not valid JSON ({e}); "
+                    "the history file is append-only JSONL") from e
+    return runs
+
+
+def history_table(runs: List[Dict]) -> str:
+    """Cross-run trend: one row per recorded benchmark invocation, plus
+    a per-claim first/last transition summary so regressions across PRs
+    stand out (a claim that was PASS and is now FAIL gets flagged)."""
+    if not runs:
+        return (f"(no {HISTORY_NAME} yet — benchmarks/run.py appends "
+                "one record per invocation)")
+    lines = ["| run | ts | suites | benches | claims pass | claims fail |",
+             "|---|---|---|---|---|---|"]
+    for i, r in enumerate(runs):
+        suites = " ".join(a for a in r.get("argv", [])
+                          if a.startswith("--")) or "(core)"
+        lines.append(f"| {i} | {r.get('ts', '?')} | {suites} "
+                     f"| {len(r.get('benches', []))} "
+                     f"| {r.get('n_pass', 0)} | {r.get('n_fail', 0)} |")
+    # per-claim trajectory: first seen -> latest
+    first: Dict[str, bool] = {}
+    last: Dict[str, bool] = {}
+    for r in runs:
+        for k, v in r.get("claims", {}).items():
+            first.setdefault(k, bool(v))
+            last[k] = bool(v)
+    regressed = sorted(k for k in last if first[k] and not last[k])
+    fixed = sorted(k for k in last if not first[k] and last[k])
+    lines.append("")
+    lines.append(f"{len(last)} distinct claims tracked over "
+                 f"{len(runs)} run(s)")
+    if regressed:
+        lines.append("**REGRESSED** (passed earlier, failing latest): "
+                     + ", ".join(regressed))
+    if fixed:
+        lines.append("fixed since first record: " + ", ".join(fixed))
+    return "\n".join(lines)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-experiments", action="store_true",
@@ -163,6 +222,8 @@ def main() -> int:
 
     benches = load_benches(args.bench_dir)      # raises loudly
     print(bench_table(benches))
+    print()
+    print(history_table(load_history(args.bench_dir)))
     failed = bench_failures(benches)
     if failed:
         print(f"FAILED_CLAIMS: {failed}", file=sys.stderr)

@@ -9,16 +9,45 @@ experiments/paper/.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+HISTORY_PATH = "experiments/paper/BENCH_history.jsonl"
+
+
+RECORDS: list = []          # every bench row of the current invocation
 
 
 def _run(name, fn, derive):
     t0 = time.perf_counter()
     out = fn()
     us = (time.perf_counter() - t0) * 1e6
-    print(f"{name},{us:.0f},{derive(out)}", flush=True)
+    derived = derive(out)
+    print(f"{name},{us:.0f},{derived}", flush=True)
+    RECORDS.append({"bench": name, "us_per_call": round(us),
+                    "derived": derived})
     return out
+
+
+def append_history(records, claims, failures,
+                   path: str = HISTORY_PATH) -> dict:
+    """Append one JSONL record of this run's key claims so the benchmark
+    trajectory accretes across PRs instead of being discarded.
+
+    Each line: ``{"ts", "argv", "benches": [{bench, us_per_call,
+    derived}], "claims": {name: bool}, "n_pass", "n_fail"}``."""
+    rec = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "argv": sys.argv[1:],
+           "benches": records,
+           "claims": claims,
+           "n_pass": sum(1 for v in claims.values() if v),
+           "n_fail": len(failures)}
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec
 
 
 def main() -> int:
@@ -47,14 +76,24 @@ def main() -> int:
                     help="also run the observability benchmark (hook "
                          "overhead <= 5%%, live roofline == offline "
                          "census, trace/exposition validity)")
+    ap.add_argument("--memgap", action="store_true",
+                    help="also run the memory-gap auditor + SLO monitor "
+                         "benchmark (exact pool accounting, reserved-"
+                         "unused >= 2x used on worst-case budgets, SLO "
+                         "breach/recovery latency, hook overhead)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="do not append this run's claims to "
+                         + HISTORY_PATH)
     args, _ = ap.parse_known_args()
 
     from benchmarks import paper_claims as pc
     print("name,us_per_call,derived")
     failures = []
+    claims = {}
 
     def claim(out, key):
         ok = bool(out.get(key, False))
+        claims[key] = ok
         if not ok:
             failures.append(key)
         return f"{key}={ok}"
@@ -171,6 +210,23 @@ def main() -> int:
 
         _run("observability", lambda: obs_suite(smoke=True), _obs_derive)
 
+    if args.memgap:
+        from benchmarks.memory_gap import run_suite as memgap_suite
+
+        def _memgap_derive(o):
+            for key in ("claim_exact_accounting",
+                        "claim_reserved_unused_2x",
+                        "claim_slo_within_one_window",
+                        "claim_overhead_le_5pct"):
+                claim(o, key)
+            return (f"resv_over_used="
+                    f"{o['reserved_unused']['reserved_over_used']:.1f}x;"
+                    f"overhead="
+                    f"{o['overhead']['overhead_fraction'] * 100:.1f}%")
+
+        _run("memory_gap", lambda: memgap_suite(smoke=True),
+             _memgap_derive)
+
     # §Roofline aggregation from the dry-run artifacts, if present
     from benchmarks.roofline_table import load_records, summary
     recs = load_records()
@@ -181,6 +237,11 @@ def main() -> int:
     else:
         print("roofline_table,0,no dryrun records yet "
               "(run python -m repro.launch.dryrun --all)")
+
+    if not args.no_history:
+        rec = append_history(RECORDS, claims, failures)
+        print(f"history,0,appended {rec['n_pass']} pass / "
+              f"{rec['n_fail']} fail to {HISTORY_PATH}")
 
     if failures:
         print(f"FAILED_CLAIMS: {failures}", file=sys.stderr)

@@ -156,3 +156,65 @@ def knee_point(curves: ServingCurves, eps: float = 0.1) -> int:
     eff = curves.throughput / np.maximum(curves.batches * t1, 1e-12)
     ok = curves.batches[eff > eps]
     return int(ok.max()) if len(ok) else int(curves.batches.min())
+
+
+# ------------------------------------------- offline-vs-observed sizing --
+
+@dataclasses.dataclass(frozen=True)
+class SizingAudit:
+    """Offline ``max_batch_for`` sizing held against observed true use.
+
+    Both sides are expressed in *tokens per request* so the comparison is
+    dtype- and layout-free: the offline sizer assumed every request holds
+    ``assumed_ctx_tokens`` of KV; the memory-gap auditor measured the peak
+    true use at ``observed_tokens_per_req``. ``achievable_batch`` is what
+    the same HBM budget supports at the observed footprint — the batch
+    headroom worst-case sizing left on the table.
+    """
+    sized_batch: int                 # max_batch_for's worst-case answer
+    assumed_ctx_tokens: int
+    observed_tokens_per_req: float   # auditor peak_used_tokens_per_req
+    achievable_batch: int
+    gap_fraction: float              # 1 - observed/assumed footprint
+    headroom_x: float                # achievable / sized
+
+    def summary(self) -> str:
+        return (f"sized B={self.sized_batch} @ {self.assumed_ctx_tokens} "
+                f"tok/req worst-case; observed peak "
+                f"{self.observed_tokens_per_req:.1f} tok/req -> "
+                f"achievable B={self.achievable_batch} "
+                f"({self.headroom_x:.1f}x headroom, "
+                f"gap {self.gap_fraction * 100:.1f}%)")
+
+
+def audit_sizing(cfg, hw, ctx: int, *, observed_tokens_per_req: float,
+                 dtype_bytes: int = 2,
+                 prefix_hit_rate: float = 0.0) -> SizingAudit:
+    """Cross-check BCA's offline HBM sizing against an observed run.
+
+    :func:`repro.core.perfmodel.max_batch_for` sizes the batch assuming
+    every request pins ``ctx`` KV tokens (vLLM-style 90%-of-HBM fill).
+    The memory-gap auditor reports what requests *actually* held at the
+    pool's true-use peak; at that footprint the same free HBM supports
+    ``ctx / observed`` times the batch. A large ``gap_fraction`` is the
+    paper's memory gap, localized: capacity reserved for worst-case
+    context that the workload never used.
+    """
+    from repro.core.perfmodel import max_batch_for
+    if observed_tokens_per_req <= 0:
+        raise ValueError("observed_tokens_per_req must be > 0 "
+                         "(did the auditor see any steps?)")
+    sized = max_batch_for(cfg, hw, ctx, dtype_bytes=dtype_bytes,
+                          prefix_hit_rate=prefix_hit_rate)
+    # the sizer's own free-HBM budget, re-divided at the observed
+    # per-request footprint (same formula, observed ctx)
+    achievable = max_batch_for(
+        cfg, hw, max(1, int(round(observed_tokens_per_req))),
+        dtype_bytes=dtype_bytes, prefix_hit_rate=prefix_hit_rate)
+    return SizingAudit(
+        sized_batch=sized,
+        assumed_ctx_tokens=int(ctx),
+        observed_tokens_per_req=float(observed_tokens_per_req),
+        achievable_batch=achievable,
+        gap_fraction=max(0.0, 1.0 - observed_tokens_per_req / ctx),
+        headroom_x=achievable / max(sized, 1))

@@ -330,6 +330,32 @@ class PagedKVCache:
         # device block-table cache for the zero-copy view
         self._dev_tables: Optional[jax.Array] = None
         self._dev_tables_key: Optional[Tuple] = None
+        # --- byte accounting (memory-gap auditor) ---
+        # one physical block's bytes summed across every paged KV leaf;
+        # each leaf's block axis holds num_blocks+1 rows (incl. trash),
+        # so nbytes divides evenly by it
+        blk = 0
+        dense = 0
+        for leaf, kv in zip(jax.tree.leaves(self.pool),
+                            jax.tree.leaves(self._is_kv)):
+            if kv:
+                blk += leaf.nbytes // (num_blocks + 1)
+            else:
+                dense += leaf.nbytes
+        self.block_bytes: int = blk
+        self.dense_state_bytes: int = dense     # per-slot state, not paged
+
+    @property
+    def pool_bytes(self) -> int:
+        """Accountable pool bytes: every real physical block (the trash
+        block absorbs padding writes and is excluded — it never holds
+        request state, so attributing it would dilute the waste terms)."""
+        return self.block_bytes * self.num_blocks
+
+    @property
+    def token_bytes(self) -> float:
+        """KV bytes one written token occupies (block_bytes/block_size)."""
+        return self.block_bytes / self.block_size
 
     # ------------------------------------------------------------------
     def gather(self, req_ids: Sequence[int], pad_blocks: int):

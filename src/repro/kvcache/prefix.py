@@ -116,6 +116,18 @@ class PrefixIndex:
     def cached_blocks(self) -> int:
         return self._cached
 
+    def held_blocks(self) -> List[int]:
+        """Physical blocks the cache *alone* keeps alive (ref count 1:
+        indexed but in no request's table). These are the pool bytes the
+        memory-gap auditor attributes to "prefix-cache-held" — warm
+        capacity that is neither free nor serving a live request."""
+        return [n.block for n in self._iter_nodes()
+                if self.manager.ref_count(n.block) == 1]
+
+    def indexed_blocks(self) -> List[int]:
+        """Every physical block the index references (held or shared)."""
+        return [n.block for n in self._iter_nodes()]
+
     # --------------------------------------------------------- lookup ----
     def _chunks(self, tokens: np.ndarray, n_full: int):
         bs = self.block_size

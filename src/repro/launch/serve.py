@@ -104,6 +104,26 @@ def main():
                     help="periodic metrics-emit interval for --metrics-out "
                          "during --stream serving (the batch path emits "
                          "once at the end)")
+    ap.add_argument("--audit-memory", action="store_true",
+                    help="attribute every KV pool byte per step (used / "
+                         "block pad / prefix-held / free, plus the "
+                         "reserved-unused and bucket-pad overlays) and "
+                         "print the end-of-run memory gap report with the "
+                         "BCA sizing cross-check")
+    ap.add_argument("--slo-ttft", type=float, default=0.0, metavar="S",
+                    help="TTFT objective in seconds: 95% of first tokens "
+                         "within S, breach/recovery via multi-window burn "
+                         "rates (0 = no TTFT SLO)")
+    ap.add_argument("--slo-itl", type=float, default=0.0, metavar="S",
+                    help="ITL objective in seconds: 95% of decode steps "
+                         "within S (0 = no ITL SLO)")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="live ANSI terminal dashboard (windowed "
+                         "latencies, memory-gap bars, SLO burn rates); "
+                         "renders a final frame on batch runs")
+    ap.add_argument("--dashboard-html", default=None, metavar="PATH",
+                    help="write the dashboard as a self-contained HTML "
+                         "report (inline SVG charts) at end of run")
     args = ap.parse_args()
 
     import jax
@@ -211,11 +231,25 @@ def main():
                 # InjectedFault (no peer to redrive onto)
                 backend.faults = faults
         # runtime observability: roofline attribution + lifecycle tracing
-        # attach to the backend; metrics snapshots go through the emitter
-        obs = emitter = None
-        if args.trace or args.metrics_out:
+        # attach to the backend; metrics snapshots go through the emitter;
+        # SLOs + the dashboard ride the windows layer
+        obs = emitter = dash = None
+        slos = []
+        if args.slo_ttft or args.slo_itl:
+            from repro.serving import default_slos
+            slos = default_slos(ttft_s=args.slo_ttft or None,
+                                itl_s=args.slo_itl or None)
+        want_dash = args.dashboard or args.dashboard_html
+        if args.trace or args.metrics_out or args.audit_memory \
+                or want_dash or slos:
             from repro.serving import MetricsEmitter, Observability
-            obs = Observability(hw=hw)
+            obs = Observability(hw=hw, audit_memory=args.audit_memory,
+                                windows=bool(want_dash or slos
+                                             or args.audit_memory),
+                                slos=slos or None)
+            # crash-safe: everything recorded so far survives a replica
+            # failure or ^C as a valid trace file
+            obs.trace.autosave_path = args.trace
             obs.attach_backend(backend)
             if args.metrics_out:
                 path = None if args.metrics_out == "-" else args.metrics_out
@@ -223,24 +257,52 @@ def main():
                     else "json"
                 emitter = MetricsEmitter(path, fmt=fmt,
                                          interval_s=args.obs_interval)
-        if args.stream:
-            # online path: submit everything through the facade, stream
-            # the first request's token deltas, drain the rest
-            if n_rep > 1 and args.cluster_mode == "thread":
-                print("[stream] note: streaming steps replicas "
-                      "cooperatively from the calling thread; "
-                      "--cluster-mode thread applies only to the batch "
-                      "run() path")
-            api = ServingAPI(backend, obs=obs, emitter=emitter)
-            handles = [api.submit(r) for r in reqs]
-            for ev in api.stream(handles[0]):
-                print(f"[stream] req {ev.req_id} +{len(ev.new_token_ids)} "
-                      f"tok {list(ev.new_token_ids)} "
-                      f"finished={ev.finished} reason={ev.finish_reason}")
-            api.drain()
-            metrics = api.metrics()
-        else:
-            metrics = backend.run(reqs)
+            if want_dash:
+                from repro.serving import Dashboard
+                import io
+                out = None if args.dashboard else io.StringIO()
+                dash = Dashboard(obs, out=out)
+        try:
+            if args.stream:
+                # online path: submit everything through the facade,
+                # stream the first request's token deltas, drain the rest
+                if n_rep > 1 and args.cluster_mode == "thread":
+                    print("[stream] note: streaming steps replicas "
+                          "cooperatively from the calling thread; "
+                          "--cluster-mode thread applies only to the batch "
+                          "run() path")
+                api = ServingAPI(backend, obs=obs, emitter=emitter,
+                                 dashboard=dash)
+                handles = [api.submit(r) for r in reqs]
+                for ev in api.stream(handles[0]):
+                    print(f"[stream] req {ev.req_id} "
+                          f"+{len(ev.new_token_ids)} "
+                          f"tok {list(ev.new_token_ids)} "
+                          f"finished={ev.finished} "
+                          f"reason={ev.finish_reason}")
+                api.drain()
+                metrics = api.metrics()
+            elif n_rep == 1 and obs is not None:
+                # batch path through the facade so the SLO monitor,
+                # emitter and dashboard tick during the run
+                metrics = ServingAPI(backend, obs=obs, emitter=emitter,
+                                     dashboard=dash).run(reqs)
+            else:
+                metrics = backend.run(reqs)
+        except BaseException:
+            # crash path (satellite of the tentpole's exception-safety
+            # contract): flush the partial trace + last-known metrics
+            # before propagating — the evidence must survive the failure
+            if obs is not None:
+                obs.trace.flush()
+            if emitter is not None:
+                try:
+                    emitter.close()
+                except Exception:
+                    pass
+            raise
+        if dash is not None:
+            dash.close()
         if emitter is not None:
             emitter.emit(metrics)       # final end-of-run snapshot
             if args.metrics_out != "-":
@@ -262,6 +324,35 @@ def main():
                       f"device={p['device_s']*1e3:.2f}ms "
                       f"host={p['host_s']*1e3:.2f}ms "
                       f"host_gap={p['host_gap_fraction']*100:.0f}%")
+            if args.dashboard_html:
+                from repro.serving.obs.dashboard import write_html_report
+                write_html_report(obs, obs.trace.now(), args.dashboard_html,
+                                  title=f"{args.arch} serving run")
+                print(f"[obs] dashboard -> {args.dashboard_html}")
+            if obs.slo is not None:
+                s = obs.slo.summary()
+                print(f"[slo] breaches={s['breaches']} "
+                      f"recoveries={s['recoveries']} "
+                      f"active={s['active'] or 'none'}")
+                for e in obs.slo.events:
+                    print(f"[slo] {e.row()}")
+            for pid, rep in obs.memory_gap_report().items():
+                mb = rep["mean_bytes"]
+                pool = max(rep["pool_bytes"], 1)
+                print(f"[memgap] replica {pid}: "
+                      f"pool={pool / 2**20:.1f}MiB "
+                      f"used={100 * mb['used'] / pool:.1f}% "
+                      f"blk_pad={100 * mb['block_pad'] / pool:.1f}% "
+                      f"pfx_held={100 * mb['prefix_held'] / pool:.1f}% "
+                      f"free={100 * mb['free'] / pool:.1f}% | "
+                      f"resv_unused={100 * mb['reserved_unused'] / pool:.1f}% "
+                      f"worst={rep['worst_term']}")
+                from repro.core.bca import audit_sizing
+                sa = audit_sizing(
+                    full_cfg, hw, args.ctx,
+                    observed_tokens_per_req=max(
+                        rep["peak_used_tokens_per_req"], 1.0))
+                print(f"[memgap] replica {pid}: {sa.summary()}")
         if n_rep > 1:
             print(metrics.summary())
             return

@@ -14,8 +14,11 @@ from repro.serving.cluster import (ClusterMetrics, ReplicatedCluster,  # noqa
                                    autoscale)
 from repro.serving.api import (GenerationOutput, RequestHandle,  # noqa
                                ServingAPI)
-from repro.serving.obs import (BoundedSeries, LiveRoofline,  # noqa
-                               MetricsEmitter, Observability, StepPhases,
-                               Tracer, lint_prometheus, metrics_from_json,
+from repro.serving.obs import (BoundedSeries, Dashboard,  # noqa
+                               LiveRoofline, MemoryGapAuditor,
+                               MetricsEmitter, Observability, SLO,
+                               SLOMonitor, StepPhases, Tracer,
+                               WindowAggregator, default_slos,
+                               lint_prometheus, metrics_from_json,
                                metrics_to_json, prometheus_text,
                                validate_chrome_trace)

@@ -343,13 +343,18 @@ class ServingAPI:
 
     def __init__(self, backend: Union[ContinuousBatchingEngine,
                                       ReplicatedCluster], *,
-                 obs=None, emitter=None):
+                 obs=None, emitter=None, dashboard=None):
         """``obs`` (a :class:`~repro.serving.obs.Observability`) attaches
         runtime observability to the wrapped backend — roofline
-        attribution, lifecycle tracing — for this session; ``emitter``
-        (a :class:`~repro.serving.obs.MetricsEmitter`) is ticked once per
+        attribution, lifecycle tracing, memory-gap auditing — for this
+        session; ``emitter`` (a
+        :class:`~repro.serving.obs.MetricsEmitter`) is ticked once per
         scheduling round on the serving timeline, so a streamed session
-        emits periodic metrics snapshots without its own timer thread."""
+        emits periodic metrics snapshots without its own timer thread;
+        ``dashboard`` (a :class:`~repro.serving.obs.Dashboard`) is ticked
+        on the same cadence. When ``obs`` carries an SLO monitor it is
+        evaluated every pump, so breach/recovery events land within one
+        scheduling round of the window that trips them."""
         if isinstance(backend, ReplicatedCluster):
             self._backend = _ClusterBackend(backend)
         elif isinstance(backend, ContinuousBatchingEngine):
@@ -363,6 +368,7 @@ class ServingAPI:
         if obs is not None:
             obs.attach_backend(backend)
         self.emitter = emitter
+        self.dashboard = dashboard
         self._handles: Dict[int, RequestHandle] = {}
         self._submitted: List[Request] = []
         self._next_id = 0
@@ -392,6 +398,11 @@ class ServingAPI:
         busy = self._backend.pump(self._now(), self._clock)
         if self.emitter is not None:
             self.emitter.tick(self._now(), self.metrics)
+        if self.obs is not None and self.obs.slo is not None:
+            # tracer timeline: the observers' window pushes use it
+            self.obs.slo.evaluate(self.obs.trace.now())
+        if self.dashboard is not None:
+            self.dashboard.tick(self._now())
         return busy
 
     # ---------------------------------------------------------- submit --

@@ -256,6 +256,17 @@ class ReplicatedCluster:
 
     def _sample_queues(self):
         self.queue_samples.append([rep.queue_depth for rep in self.replicas])
+        # queue-depth samples feed the windows layer too, so the live
+        # dashboard shows routing imbalance on the same timeline; the SLO
+        # monitor is evaluated here so batch cluster runs (driven without
+        # the ServingAPI pump) still fire breach/recovery events
+        obs = self.obs
+        if obs is not None and obs.windows is not None:
+            t = obs.trace.now()
+            obs.windows.push("cluster_queue_depth", t,
+                             sum(q for q in self.queue_samples[-1]))
+            if obs.slo is not None:
+                obs.slo.evaluate(t)
 
     def eligible_replicas(self) -> List[Replica]:
         """Replicas new work may be routed to: healthy and not wedged,

@@ -370,6 +370,10 @@ class ContinuousBatchingEngine:
         # hook site is one attribute check; Observability.attach installs
         # an EngineObserver here
         self.obs = None
+        # last decode step's jit-bucketing facts, stashed only when an
+        # observer is attached: (batch_pad, nb_pad, live_table_entries) —
+        # the memory-gap auditor's bucket-pad overlay input
+        self._last_buckets = None
         # telemetry — every per-step series is bounded (decimating, see
         # serving.obs.series) so soak runs cannot grow host memory
         ml = ecfg.series_maxlen
@@ -509,6 +513,7 @@ class ContinuousBatchingEngine:
         self.shed = 0
         self.shed_reasons = {}
         self.queued_aborts = 0
+        self._last_buckets = None
         self.pool.manager.total_allocations = 0
         self.pool.manager.cow_copies = 0
         if self.prefix is not None:
@@ -1115,6 +1120,10 @@ class ContinuousBatchingEngine:
             jax.block_until_ready((next_tokens, new_pool))
             t2 = time.perf_counter()
             obs.on_decode(sc, t0, t1, t2, batch=B)
+            tables = self.pool.manager.tables
+            self._last_buckets = (
+                batch_pad, nb_pad,
+                sum(min(len(tables[rid]), nb_pad) for rid in rids))
         else:
             next_tokens, new_pool = self._paged_jit(*args)
         self.pool.commit(new_pool)
@@ -1141,6 +1150,10 @@ class ContinuousBatchingEngine:
             jax.block_until_ready((logits, new_cache))
             t2 = time.perf_counter()
             obs.on_decode(sc, t0, t1, t2, batch=len(reqs))
+            tables = self.pool.manager.tables
+            self._last_buckets = (
+                len(rids), pad_blocks,
+                sum(min(len(tables[rid]), pad_blocks) for rid in rids))
         else:
             logits, new_cache = self._decode_jit(*args)
         self.pool.scatter_new_token(rids, [self._pos[r] for r in rids],

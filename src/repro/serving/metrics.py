@@ -12,6 +12,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.kvcache.prefix import PrefixStats
+from repro.serving.obs.auditor import MemoryGapStats
 from repro.serving.workload import FINISH_REASONS, Request
 
 
@@ -85,6 +86,13 @@ class ServingMetrics:
     deadline_expired: int = 0
     # aborts that caught the request still in the arrival queue
     queued_aborts: int = 0
+    # --- observability riders (None/0 unless the run opted in) ---
+    # memory-gap audit summary (Observability(audit_memory=True))
+    memgap: Optional[MemoryGapStats] = None
+    # SLO breach/recovery event counts; session-level — a cluster run
+    # reports the same monitor's counts on every replica's metrics
+    slo_breaches: int = 0
+    slo_recoveries: int = 0
 
     @property
     def throughput(self) -> float:
@@ -134,7 +142,10 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
             shed: int = 0,
             shed_reasons: Optional[Dict[str, int]] = None,
             deadline_expired: int = 0,
-            queued_aborts: int = 0) -> ServingMetrics:
+            queued_aborts: int = 0,
+            memgap: Optional[MemoryGapStats] = None,
+            slo_breaches: int = 0,
+            slo_recoveries: int = 0) -> ServingMetrics:
     done = [r for r in requests if r.t_done is not None]
     total_in = sum(r.prompt_len for r in done)
     total_out = sum(r.generated for r in done)
@@ -177,7 +188,10 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
         shed=shed,
         shed_reasons=dict(shed_reasons or {}),
         deadline_expired=deadline_expired,
-        queued_aborts=queued_aborts)
+        queued_aborts=queued_aborts,
+        memgap=memgap,
+        slo_breaches=slo_breaches,
+        slo_recoveries=slo_recoveries)
 
 
 def collect_from_engine(eng, requests: List[Request],
@@ -187,6 +201,16 @@ def collect_from_engine(eng, requests: List[Request],
     to keep this module import-light) — the one place the engine's
     telemetry attribute list is spelled out, shared by the API facade
     and the cluster's per-replica aggregation."""
+    memgap = None
+    slo_breaches = slo_recoveries = 0
+    obs = getattr(eng, "obs", None)
+    if obs is not None:
+        aud = getattr(obs, "auditor", None)
+        if aud is not None and aud.audits:
+            memgap = aud.stats()
+        mon = getattr(getattr(obs, "parent", None), "slo", None)
+        if mon is not None:
+            slo_breaches, slo_recoveries = mon.breaches, mon.recoveries
     return collect(list(requests), wall_s, eng.itl_samples,
                    eng.max_kv_fraction, eng.batch_samples,
                    kv_samples=eng.kv_fraction_samples,
@@ -198,4 +222,7 @@ def collect_from_engine(eng, requests: List[Request],
                    preemption_samples=eng.preemption_samples,
                    shed=eng.shed, shed_reasons=eng.shed_reasons,
                    deadline_expired=eng.deadline_expired,
-                   queued_aborts=eng.queued_aborts)
+                   queued_aborts=eng.queued_aborts,
+                   memgap=memgap,
+                   slo_breaches=slo_breaches,
+                   slo_recoveries=slo_recoveries)

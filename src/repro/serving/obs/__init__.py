@@ -21,6 +21,13 @@ _EXPORTS = {
     "MetricSpec": "export", "MetricsEmitter": "export",
     "lint_prometheus": "export", "metrics_from_json": "export",
     "metrics_to_json": "export", "prometheus_text": "export",
+    "MemoryGapAuditor": "auditor", "MemoryGapStats": "auditor",
+    "WasteBreakdown": "auditor", "audit_engine": "auditor",
+    "SLO": "windows", "SLOEvent": "windows", "SLOMonitor": "windows",
+    "WindowAggregator": "windows", "WindowStat": "windows",
+    "default_slos": "windows",
+    "Dashboard": "dashboard", "html_report": "dashboard",
+    "write_html_report": "dashboard",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Union
 from repro.kvcache.prefix import PrefixStats
 from repro.serving.cluster.metrics import ClusterMetrics, ReplicaStats
 from repro.serving.metrics import Percentiles, ServingMetrics
+from repro.serving.obs.auditor import MemoryGapStats
 
 SCHEMA = "repro.serving.metrics/v1"
 PREFIX = "repro"
@@ -113,6 +114,36 @@ SERVING_SPECS: List[MetricSpec] = [
     MetricSpec("prefix_blocks_evicted_total", "counter",
                "Prefix-cache blocks evicted back to the pool",
                "prefix.blocks_evicted"),
+    # --- SLO monitor (session-level; same counts on every replica) ---
+    MetricSpec("slo_breaches_total", "counter",
+               "SLO breach events (multi-window burn rate)",
+               "slo_breaches"),
+    MetricSpec("slo_recoveries_total", "counter",
+               "SLO recovery events", "slo_recoveries"),
+    # --- memory-gap auditor (None unless audit_memory was on) ---
+    MetricSpec("memgap_pool_bytes", "gauge",
+               "Accountable KV pool bytes (trash block excluded)",
+               "memgap.pool_bytes"),
+    MetricSpec("memgap_used_bytes_mean", "gauge",
+               "Mean bytes holding written KV rows (true use)",
+               "memgap.used_bytes_mean"),
+    MetricSpec("memgap_reserved_unused_bytes_mean", "gauge",
+               "Mean worst-case-commitment bytes not yet allocated",
+               "memgap.reserved_unused_bytes_mean"),
+    MetricSpec("memgap_block_pad_bytes_mean", "gauge",
+               "Mean allocated-but-unwritten bytes in live block tables",
+               "memgap.block_pad_bytes_mean"),
+    MetricSpec("memgap_prefix_held_bytes_mean", "gauge",
+               "Mean bytes held only by the prefix cache",
+               "memgap.prefix_held_bytes_mean"),
+    MetricSpec("memgap_bucket_pad_bytes_mean", "gauge",
+               "Mean trash-entry bytes in the jitted step's padded table",
+               "memgap.bucket_pad_bytes_mean"),
+    MetricSpec("memgap_gap_fraction_mean", "gauge",
+               "Mean fraction of the pool not holding live KV rows",
+               "memgap.gap_fraction_mean"),
+    MetricSpec("memgap_peak_used_bytes", "gauge",
+               "Peak true-use bytes over the run", "memgap.peak_used_bytes"),
 ]
 
 CLUSTER_SPECS: List[MetricSpec] = [
@@ -305,6 +336,8 @@ def _serving_from(d: dict) -> ServingMetrics:
         d[key] = _percentiles(d[key])
     if d.get("prefix") is not None:
         d["prefix"] = PrefixStats(**d["prefix"])
+    if d.get("memgap") is not None:
+        d["memgap"] = MemoryGapStats(**d["memgap"])
     return ServingMetrics(**d)
 
 
@@ -354,7 +387,9 @@ class MetricsEmitter:
     """
 
     def __init__(self, path: Optional[str] = None, *,
-                 interval_s: float = 10.0, fmt: str = "json"):
+                 interval_s: float = 10.0, fmt: str = "json",
+                 provider: Optional[Callable[
+                     [], Union[ServingMetrics, ClusterMetrics]]] = None):
         if fmt not in ("json", "prom"):
             raise ValueError(f"fmt must be 'json' or 'prom', got {fmt!r}")
         if interval_s <= 0:
@@ -362,6 +397,9 @@ class MetricsEmitter:
         self.path = path
         self.interval_s = interval_s
         self.fmt = fmt
+        # default provider for close()/`with`: lets the final snapshot
+        # happen even when the run dies before handing metrics over
+        self.provider = provider
         self.emits = 0
         self._last: Optional[float] = None
 
@@ -391,6 +429,26 @@ class MetricsEmitter:
         self.emits += 1
 
     def close(self, metrics=None):
-        """Final unconditional emit (end-of-run snapshot)."""
+        """Final unconditional emit (end-of-run snapshot). Falls back to
+        the configured ``provider`` when no metrics are handed in."""
+        if metrics is None and self.provider is not None:
+            metrics = self.provider()
         if metrics is not None:
             self.emit(metrics)
+
+    # `with MetricsEmitter(path, provider=api.metrics):` guarantees a
+    # final snapshot on disk however the block exits — same contract as
+    # Tracer's autosave: a replica crash mid-run must still leave the
+    # last known-good metrics behind.
+    def __enter__(self) -> "MetricsEmitter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        try:
+            self.close()
+        except Exception:
+            # the final snapshot is best-effort on the crash path: the
+            # in-flight exception is the evidence that matters
+            if exc_type is None:
+                raise
+        return False

@@ -34,13 +34,19 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.hardware import TPU_V5E, Hardware
+from repro.serving.obs.auditor import MemoryGapAuditor
 from repro.serving.obs.roofline import (LiveRoofline, StepCensus,
                                         StepCensusCache)
 from repro.serving.obs.series import DEFAULT_SERIES_MAXLEN, BoundedSeries
 from repro.serving.obs.trace import DEFAULT_MAX_EVENTS, Tracer
+from repro.serving.obs.windows import (
+    SLO, STREAM_BATCH, STREAM_DEADLINE, STREAM_E2E, STREAM_ITL, STREAM_KV,
+    STREAM_TOKENS, STREAM_TTFT, STREAM_WASTE_RESERVED, STREAM_WASTE_USED,
+    SLOMonitor, WindowAggregator)
+from repro.serving.workload import FINISH_DEADLINE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +76,10 @@ class EngineObserver:
         self.census: StepCensusCache = parent.census
         self.roofline = LiveRoofline(parent.hw, maxlen=series_maxlen)
         self.phases: BoundedSeries = BoundedSeries(series_maxlen)
+        # per-step pool-byte attribution (opt-in: Observability(
+        # audit_memory=True)); fed from end_step
+        self.auditor: Optional[MemoryGapAuditor] = \
+            MemoryGapAuditor(series_maxlen) if parent.audit_memory else None
         # request-thread timeline anchors (tracer seconds)
         self._t_submit: Dict[int, float] = {}
         self._t_decode: Dict[int, float] = {}
@@ -106,6 +116,10 @@ class EngineObserver:
                            tid=self._tid(req), cat="lifecycle",
                            args={"req": req.req_id})
         self._t_decode[req.req_id] = t
+        w = self.parent.windows
+        if w is not None and req.state.t_first_token is not None:
+            w.push(STREAM_TTFT, t,
+                   req.state.t_first_token - req.arrival_s)
 
     def on_finish(self, req, reason: str):
         t = self.trace.now()
@@ -119,6 +133,12 @@ class EngineObserver:
         self.trace.instant(f"finish:{reason}", t, pid=self.pid, tid=tid,
                            cat="lifecycle", args={"req": req.req_id})
         self._t_submit.pop(req.req_id, None)
+        w = self.parent.windows
+        if w is not None:
+            if req.state.t_done is not None:
+                w.push(STREAM_E2E, t, req.state.t_done - req.arrival_s)
+            w.push(STREAM_DEADLINE, t,
+                   1.0 if reason == FINISH_DEADLINE else 0.0)
 
     def on_preempt(self, req):
         # recompute-preemption: the decode span (if any) ends here and the
@@ -217,6 +237,28 @@ class EngineObserver:
                             "prefilling": len(eng.prefilling),
                             "waiting": len(eng.waiting)},
                            pid=self.pid)
+        # memory-gap audit + windowed feed (both opt-in; see windows.py)
+        wb = None
+        if self.auditor is not None:
+            wb = self.auditor.on_step(eng, n_decode=n_decode)
+            self.trace.counter("kv_waste_bytes", t_now,
+                               {"used": wb.used_bytes,
+                                "block_pad": wb.block_pad_bytes,
+                                "prefix_held": wb.prefix_held_bytes,
+                                "free": wb.free_bytes,
+                                "reserved_unused": wb.reserved_unused_bytes},
+                               pid=self.pid)
+        w = self.parent.windows
+        if w is not None:
+            if n_decode:
+                w.push(STREAM_ITL, t_now, total_s)
+            w.push(STREAM_KV, t_now, eng.pool.manager.used_fraction)
+            w.push(STREAM_BATCH, t_now, n_decode)
+            w.push(STREAM_TOKENS, t_now, n_decode + n_prefill)
+            if wb is not None:
+                w.push(STREAM_WASTE_USED, t_now, wb.used_bytes)
+                w.push(STREAM_WASTE_RESERVED, t_now,
+                       wb.reserved_unused_bytes)
 
     # ----------------------------------------------------------- views --
     def phase_summary(self) -> dict:
@@ -261,12 +303,28 @@ class Observability:
 
     def __init__(self, hw: Optional[Hardware] = None, *,
                  series_maxlen: int = DEFAULT_SERIES_MAXLEN,
-                 max_events: int = DEFAULT_MAX_EVENTS):
+                 max_events: int = DEFAULT_MAX_EVENTS,
+                 audit_memory: bool = False,
+                 windows: Union[bool, WindowAggregator, None] = None,
+                 slos: Optional[Sequence[SLO]] = None):
         self.hw = hw or TPU_V5E
         self.trace = Tracer(max_events=max_events)
         self.census = StepCensusCache()
         self.series_maxlen = series_maxlen
         self.observers: Dict[int, EngineObserver] = {}
+        # memory-gap auditing: each attached replica gets a
+        # MemoryGapAuditor fed from end_step (see obs/auditor.py)
+        self.audit_memory = audit_memory
+        # windowed telemetry: pass True for a default aggregator, an
+        # aggregator to share one, or SLOs (which require windows)
+        if isinstance(windows, WindowAggregator):
+            self.windows: Optional[WindowAggregator] = windows
+        elif windows or slos:
+            self.windows = WindowAggregator()
+        else:
+            self.windows = None
+        self.slo: Optional[SLOMonitor] = SLOMonitor(
+            list(slos), self.windows, tracer=self.trace) if slos else None
 
     # ------------------------------------------------------------ attach --
     def attach(self, engine, pid: Optional[int] = None) -> EngineObserver:
@@ -316,7 +374,7 @@ class Observability:
 
     def summary(self) -> dict:
         """Per-replica phase + roofline summaries, plus census stats."""
-        return {
+        out = {
             "hardware": self.hw.name,
             "replicas": {pid: ob.summary()
                          for pid, ob in sorted(self.observers.items())},
@@ -325,6 +383,19 @@ class Observability:
             "trace": {"events": self.trace.n_events,
                       "dropped": self.trace.dropped},
         }
+        if self.slo is not None:
+            out["slo"] = self.slo.summary()
+        gap = self.memory_gap_report()
+        if gap:
+            out["memory_gap"] = gap
+        return out
+
+    def memory_gap_report(self) -> Dict[int, dict]:
+        """Per-replica end-of-run memory gap reports (empty unless
+        ``audit_memory=True`` and steps ran)."""
+        return {pid: ob.auditor.report()
+                for pid, ob in sorted(self.observers.items())
+                if ob.auditor is not None and ob.auditor.audits}
 
     def roofline_rows(self) -> List[str]:
         """Printable per-replica live-roofline lines."""

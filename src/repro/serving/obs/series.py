@@ -40,8 +40,11 @@ class BoundedSeries(list):
     __slots__ = ("maxlen", "stride", "appended", "_skip")
 
     def __init__(self, maxlen: int = DEFAULT_SERIES_MAXLEN, iterable=()):
-        if maxlen < 2:
-            raise ValueError(f"maxlen must be >= 2, got {maxlen}")
+        # maxlen=1 is the degenerate bound: the series keeps exactly one
+        # sample (the run's first kept element at the current stride) and
+        # decimation degenerates to stride doubling
+        if maxlen < 1:
+            raise ValueError(f"maxlen must be >= 1, got {maxlen}")
         super().__init__(iterable)
         self.maxlen = int(maxlen)
         self.stride = 1
@@ -64,6 +67,11 @@ class BoundedSeries(list):
         self._skip = 0
         if len(self) >= self.maxlen:
             self._decimate()
+        if len(self) >= self.maxlen:
+            # only reachable at maxlen=1: decimating [x0] keeps x0 (the
+            # run anchor) and the incoming sample lands on a now-dropped
+            # odd stride multiple — discard it, the stride has doubled
+            return
         super().append(x)
 
     def extend(self, xs):

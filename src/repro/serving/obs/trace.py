@@ -29,6 +29,7 @@ soak run cannot grow host memory without limit — same policy as
 from __future__ import annotations
 
 import json
+import os
 import time
 from typing import Dict, List, Optional
 
@@ -39,11 +40,13 @@ class Tracer:
     """Collects Trace Event Format events; exports Perfetto-loadable JSON."""
 
     def __init__(self, max_events: int = DEFAULT_MAX_EVENTS,
-                 epoch: Optional[float] = None):
+                 epoch: Optional[float] = None,
+                 autosave_path: Optional[str] = None):
         if max_events < 1:
             raise ValueError(f"max_events must be >= 1, got {max_events}")
         self.epoch = time.perf_counter() if epoch is None else epoch
         self.max_events = int(max_events)
+        self.autosave_path = autosave_path
         self.events: List[dict] = []
         self.dropped = 0
         self._meta: Dict[tuple, dict] = {}   # (kind, pid, tid) -> event
@@ -119,9 +122,35 @@ class Tracer:
     def export_chrome_trace(self, path: str) -> str:
         """Write the trace to ``path``; load it in ``chrome://tracing`` or
         https://ui.perfetto.dev. Returns the path."""
-        with open(path, "w") as f:
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
             json.dump(self.to_dict(), f)
+        os.replace(tmp, path)
         return path
+
+    def flush(self) -> Optional[str]:
+        """Export to ``autosave_path`` if one was configured (no-op
+        otherwise). The crash-safe save point: everything recorded so
+        far becomes a valid, loadable trace file."""
+        if self.autosave_path is None:
+            return None
+        return self.export_chrome_trace(self.autosave_path)
+
+    # ------------------------------------------------- exception safety --
+    # `with Tracer(autosave_path="trace.json") as tr:` guarantees a valid
+    # trace on disk however the block exits — a replica crash or a ^C
+    # mid-run must not cost the evidence of what led up to it.
+    def __enter__(self) -> "Tracer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        try:
+            self.flush()
+        except Exception:
+            # never mask the in-flight exception with an export failure
+            if exc_type is None:
+                raise
+        return False
 
 
 def validate_chrome_trace(trace) -> List[str]:

@@ -1,0 +1,469 @@
+"""Memory-gap auditor + SLO monitor: exact pool-byte accounting,
+windowed aggregation, burn-rate breach/recovery, dashboard rendering,
+BCA sizing cross-check, and the exception-safe telemetry flush paths
+(crash mid-run must still leave a valid trace + final metrics)."""
+import io
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.bca import audit_sizing
+from repro.core.hardware import TPU_V5E
+from repro.models.model import Model, init_params
+from repro.serving import (SLO, BoundedSeries, ContinuousBatchingEngine,
+                           Dashboard, EngineConfig, FaultInjector, FaultSpec,
+                           InjectedFault, MetricsEmitter, Observability,
+                           ReplicatedCluster, Request, SLOMonitor,
+                           StepFunctions, Tracer, WindowAggregator,
+                           collect_from_engine, default_slos,
+                           metrics_from_json, sharegpt_like,
+                           validate_chrome_trace)
+from repro.serving.obs.auditor import (OVERLAY_TERMS, PHYSICAL_TERMS,
+                                       WasteBreakdown, audit_engine,
+                                       committed_tokens)
+from repro.serving.obs.dashboard import (html_report, render, sparkline,
+                                         waste_bar, write_html_report)
+from repro.serving.obs.windows import (STREAM_ITL, STREAM_KV, STREAM_TTFT,
+                                       WindowStat, aggregate)
+from repro.serving.workload import FINISH_FAILED
+
+
+@pytest.fixture(scope="module")
+def setup(rules):
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    steps = StepFunctions.build(model, 8)
+    return cfg, params, model, steps
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=4, block_size=8, kv_pool_tokens=4096,
+                max_model_len=128, prefill_bucket=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _engine(setup, **kw):
+    _, params, model, steps = setup
+    return ContinuousBatchingEngine(model, params, _ecfg(**kw), steps=steps)
+
+
+def _wl(cfg, n=4, seed=3, mean_out=8):
+    return sharegpt_like(n, cfg.vocab_size, seed=seed, mean_in=12,
+                         mean_out=mean_out, max_len=48, sigma=0.4)
+
+
+# ------------------------------------------------------------- auditor ----
+def test_exact_accounting_invariant_every_step(setup):
+    """The tested invariant: used + block_pad + prefix_held + free ==
+    pool_bytes, exactly, on every audited step (prefix cache on so the
+    prefix_held term is exercised)."""
+    cfg = setup[0]
+    obs = Observability(audit_memory=True)
+    eng = _engine(setup, prefix_cache=True)
+    obs.attach(eng)
+    eng.run(_wl(cfg, n=5, mean_out=10))
+    aud = obs.observer(0).auditor
+    assert aud.audits > 0
+    assert aud.pool_bytes == eng.pool.pool_bytes
+    for wb in aud.steps:
+        assert wb.physical_bytes == wb.pool_bytes      # exact, no tolerance
+        for t in PHYSICAL_TERMS + OVERLAY_TERMS:
+            assert wb.value(t) >= 0
+        assert wb.watermark_bytes <= wb.free_bytes
+        assert wb.gap_bytes == wb.pool_bytes - wb.used_bytes
+
+
+def test_reserved_unused_dominates_with_generous_budget(setup):
+    """Worst-case max_new_tokens sizing: tiny prompts with a huge output
+    budget must show reserved-unused as the pinpointed worst term."""
+    cfg = setup[0]
+    rng = np.random.default_rng(5)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=10),
+                    max_new_tokens=90) for i in range(4)]
+    obs = Observability(audit_memory=True)
+    eng = _engine(setup)
+    obs.attach(eng)
+    for r in reqs:
+        eng.add_request(r)
+    for i in range(8):
+        if not eng.step(float(i)):
+            break
+    st = obs.observer(0).auditor.stats()
+    assert st.worst_term == "reserved_unused"
+    assert st.reserved_unused_bytes_mean > st.used_bytes_mean
+    assert 0.0 < st.used_fraction_mean < 1.0
+    assert st.gap_fraction_mean == pytest.approx(1 - st.used_fraction_mean)
+
+
+def test_audit_engine_is_pure_read(setup):
+    cfg = setup[0]
+    eng = _engine(setup)
+    for r in _wl(cfg, n=3, mean_out=20):
+        eng.add_request(r)
+    for i in range(4):
+        eng.step(float(i))
+    free_before = eng.pool.manager.free_blocks
+    wb1 = audit_engine(eng)
+    wb2 = audit_engine(eng)
+    assert wb1 == wb2                      # repeatable, no state mutation
+    assert eng.pool.manager.free_blocks == free_before
+    assert wb1.n_running == len(eng.running)
+
+
+def test_committed_tokens_floor():
+    # a request that may emit L tokens writes prompt + (L-1) KV rows,
+    # never fewer than prompt + 1
+    assert committed_tokens(10, 5) == 14
+    assert committed_tokens(10, 1) == 11
+    assert committed_tokens(10, 0) == 11
+
+
+def test_auditor_report_and_means(setup):
+    cfg = setup[0]
+    obs = Observability(audit_memory=True)
+    eng = _engine(setup)
+    obs.attach(eng)
+    eng.run(_wl(cfg, n=4, mean_out=8))
+    aud = obs.observer(0).auditor
+    rep = aud.report()
+    assert set(rep["mean_bytes"]) == set(PHYSICAL_TERMS + OVERLAY_TERMS)
+    # means are exact (running sums), not the decimated series' means
+    assert rep["mean_bytes"]["used"] == pytest.approx(
+        aud._sums["used"] / aud.audits)
+    assert 0.0 <= rep["gap_fraction_mean"] <= 1.0
+    assert rep["peak_used_bytes"] >= max(wb.used_bytes for wb in aud.steps)
+    assert rep["worst_term"] in PHYSICAL_TERMS + OVERLAY_TERMS
+
+
+def test_metrics_carry_memgap_and_roundtrip(setup, tmp_path):
+    cfg = setup[0]
+    obs = Observability(audit_memory=True)
+    eng = _engine(setup)
+    obs.attach(eng)
+    reqs = _wl(cfg, n=3, mean_out=6)
+    eng.run(reqs)
+    m = collect_from_engine(eng, reqs, 1.0)
+    assert m.memgap is not None and m.memgap.steps_audited > 0
+    from repro.serving import metrics_to_json
+    path = str(tmp_path / "m.json")
+    with open(path, "w") as f:
+        json.dump(metrics_to_json(m), f)
+    got = metrics_from_json(path)
+    assert got.memgap == m.memgap
+    assert got.slo_breaches == m.slo_breaches
+
+
+# -------------------------------------------------------------- windows ----
+def test_window_aggregator_sliding_stats():
+    win = WindowAggregator()
+    for i in range(100):
+        win.push(STREAM_ITL, 0.1 * (i + 1), float(i))
+    st = win.window(STREAM_ITL, t_now=10.0, span_s=10.0)
+    assert st.count == 100 and st.vmax == 99.0
+    assert st.mean == pytest.approx(49.5)
+    assert st.rate == pytest.approx(10.0)
+    # percentiles match numpy's default linear interpolation
+    vals = np.arange(100.0)
+    assert st.p50 == pytest.approx(np.percentile(vals, 50))
+    assert st.p95 == pytest.approx(np.percentile(vals, 95))
+    assert st.p99 == pytest.approx(np.percentile(vals, 99))
+    # a narrower window sees only its own samples
+    st2 = win.window(STREAM_ITL, t_now=10.0, span_s=1.0)
+    assert st2.count == 10 and st2.p50 >= 90.0
+
+
+def test_window_aggregator_horizon_pruning_and_empty():
+    win = WindowAggregator(horizon_s=5.0)
+    for i in range(100):
+        win.push("x", float(i))
+    assert len(win.samples("x")) <= 7           # horizon kept, rest pruned
+    assert win.latest("x") == (99.0, 1.0)
+    empty = win.window("nope", t_now=1.0, span_s=1.0)
+    assert empty.count == 0 and empty == WindowStat.empty("nope", 0.0, 1.0)
+    assert win.violation_fraction("nope", t_now=1.0, span_s=1.0,
+                                  threshold=0.5) is None
+
+
+def test_tumbling_windows_tile_and_align():
+    win = WindowAggregator()
+    for i in range(40):
+        win.push("y", 0.25 * i, 1.0)           # t in [0, 9.75]
+    tw = win.tumbling("y", span_s=2.0)
+    assert len(tw) == 5
+    assert [w.t0 for w in tw] == [0.0, 2.0, 4.0, 6.0, 8.0]
+    # every sample lands in exactly one tile (t0 exclusive, t1 inclusive;
+    # the t=0 sample falls on no tile's half-open interval by design)
+    assert sum(w.count for w in tw) == 39
+
+
+def test_slo_validation():
+    with pytest.raises(ValueError, match="target"):
+        SLO("a", STREAM_ITL, 0.1, target=1.0)
+    with pytest.raises(ValueError, match="fast window"):
+        SLO("a", STREAM_ITL, 0.1, fast_window_s=60.0, slow_window_s=2.0)
+    win = WindowAggregator()
+    with pytest.raises(ValueError, match="duplicate"):
+        SLOMonitor([SLO("a", STREAM_ITL, 0.1), SLO("a", STREAM_TTFT, 1.0)],
+                   win)
+
+
+def test_slo_breach_needs_both_windows_hot():
+    """A short blip trips the fast window only — no breach until the slow
+    window burn also exceeds the threshold (sustained degradation)."""
+    slo = SLO("itl", STREAM_ITL, threshold=0.01, target=0.5,
+              fast_window_s=1.0, slow_window_s=30.0)
+    win = WindowAggregator()
+    mon = SLOMonitor([slo], win)
+    t = 0.0
+    for i in range(280):                       # 28 s of healthy samples
+        t = round(0.1 * (i + 1), 6)
+        win.push(STREAM_ITL, t, 0.001)
+        mon.evaluate(t)
+    assert not mon.events
+    for i in range(10):                        # 1 s blip of violations
+        t = round(t + 0.1, 6)
+        win.push(STREAM_ITL, t, 1.0)
+        mon.evaluate(t)
+    bf, bs = mon.burn_rates(slo, t)
+    assert bf > slo.burn_threshold             # fast window is hot...
+    assert bs <= slo.burn_threshold            # ...slow window is not
+    assert not mon.breached["itl"] and mon.breaches == 0
+    while t < 60.0:                            # sustained degradation
+        t = round(t + 0.1, 6)
+        win.push(STREAM_ITL, t, 1.0)
+        mon.evaluate(t)
+    assert mon.breached["itl"] and mon.breaches == 1
+    assert [e.kind for e in mon.events] == ["breach"]
+
+
+def test_slo_recovery_and_trace_instants():
+    slo = SLO("itl", STREAM_ITL, threshold=0.01, target=0.5,
+              fast_window_s=1.0, slow_window_s=5.0)
+    win = WindowAggregator()
+    tr = Tracer()
+    mon = SLOMonitor([slo], win, tracer=tr)
+    t = 0.0
+    for _ in range(100):                       # degraded from the start
+        t = round(t + 0.1, 6)
+        win.push(STREAM_ITL, t, 1.0)
+        mon.evaluate(t)
+    assert mon.breached["itl"]
+    for _ in range(200):                       # healthy again
+        t = round(t + 0.1, 6)
+        win.push(STREAM_ITL, t, 0.001)
+        mon.evaluate(t)
+    assert not mon.breached["itl"]
+    assert mon.breaches == 1 and mon.recoveries == 1
+    s = mon.summary()
+    assert s["active"] == [] and len(s["events"]) == 2
+    names = {e["name"] for e in tr.to_dict()["traceEvents"]}
+    assert {"slo_breach:itl", "slo_recover:itl"} <= names
+
+
+def test_default_slos_shapes():
+    assert default_slos() == []
+    slos = default_slos(ttft_s=1.0, itl_s=0.05, deadline_target=0.99)
+    assert [s.name for s in slos] == ["ttft", "itl", "deadline"]
+    assert slos[2].threshold == 0.5            # indicator stream
+
+
+# ------------------------------------------------------------ dashboard ----
+def test_sparkline_and_waste_bar():
+    assert sparkline([]) == ""
+    line = sparkline([0.0, 0.5, 1.0], width=3)
+    assert len(line) == 3 and line[0] == "▁" and line[-1] == "█"
+    wb = WasteBreakdown(step=1, pool_bytes=1000, used_bytes=500,
+                        block_pad_bytes=250, prefix_held_bytes=0,
+                        free_bytes=250, watermark_bytes=0,
+                        reserved_unused_bytes=0, bucket_pad_bytes=0,
+                        used_tokens=10, n_running=1, n_prefilling=0)
+    bar = waste_bar(wb, width=40, color=False)
+    assert len(bar) == 40
+    assert bar.count("█") == 20                # used: half the pool
+    assert bar.count("▓") == 10 and bar.count("░") == 10
+
+
+def test_render_frame_and_html_report(setup, tmp_path):
+    cfg = setup[0]
+    obs = Observability(audit_memory=True, windows=True,
+                        slos=[SLO("itl", STREAM_ITL, 0.5)])
+    eng = _engine(setup)
+    obs.attach(eng)
+    eng.run(_wl(cfg, n=4, mean_out=8))
+    obs.slo.evaluate(obs.trace.now())
+    t = obs.trace.now()
+    frame = render(obs, t, color=False)
+    assert "serving dashboard" in frame
+    assert "slo itl" in frame and "replica 0 pool" in frame
+    assert "% used" in frame
+    html = html_report(obs, t, title="t")
+    assert html.startswith("<!doctype html>") and "svg" in html
+    path = str(tmp_path / "dash.html")
+    write_html_report(obs, t, path)
+    assert open(path).read() == html_report(obs, t, title="serving run")
+
+
+def test_dashboard_tick_gating_and_close(setup):
+    cfg = setup[0]
+    obs = Observability(audit_memory=True, windows=True)
+    eng = _engine(setup)
+    obs.attach(eng)
+    eng.run(_wl(cfg, n=2, mean_out=6))
+    out = io.StringIO()
+    dash = Dashboard(obs, interval_s=1.0, out=out, color=False)
+    assert dash.tick(0.0) is True
+    assert dash.tick(0.5) is False             # interval not elapsed
+    assert dash.tick(1.0) is True
+    dash.close()
+    assert dash.frames == 3 and out.getvalue()
+
+
+# --------------------------------------------------- exception safety ----
+def test_tracer_context_flushes_on_crash(tmp_path):
+    path = str(tmp_path / "t.json")
+    with pytest.raises(RuntimeError, match="boom"):
+        with Tracer(autosave_path=path) as tr:
+            tr.instant("before_crash", 0.5)
+            raise RuntimeError("boom")
+    assert validate_chrome_trace(path) == []
+    names = {e["name"] for e in json.load(open(path))["traceEvents"]}
+    assert "before_crash" in names
+
+
+def test_tracer_exit_never_masks_the_crash(tmp_path):
+    # autosave path is unwritable: the export failure must not replace
+    # the in-flight exception ...
+    bad = str(tmp_path / "no" / "such" / "dir" / "t.json")
+    with pytest.raises(RuntimeError, match="original"):
+        with Tracer(autosave_path=bad):
+            raise RuntimeError("original")
+    # ... but on a clean exit the same failure is raised loudly
+    with pytest.raises(OSError):
+        with Tracer(autosave_path=bad):
+            pass
+
+
+def test_emitter_context_final_snapshot_on_crash(setup, tmp_path):
+    cfg = setup[0]
+    eng = _engine(setup)
+    reqs = _wl(cfg, n=2, mean_out=4)
+    eng.run(reqs)
+    path = str(tmp_path / "m.json")
+    em = MetricsEmitter(path, interval_s=1e9,
+                        provider=lambda: collect_from_engine(eng, reqs, 1.0))
+    with pytest.raises(RuntimeError):
+        with em:
+            raise RuntimeError("mid-run death")
+    assert em.emits == 1
+    assert metrics_from_json(path).n_completed == len(reqs)
+
+
+def test_replica_crash_yields_valid_trace_and_snapshot(setup, tmp_path):
+    """Regression (satellite): kill a replica mid-run with recovery off —
+    the run dies, but the context-managed tracer + emitter still leave a
+    loadable Chrome trace and a final metrics snapshot on disk."""
+    cfg = setup[0]
+    inj = FaultInjector([FaultSpec("kill", replica=1, step=2)])
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="thread", faults=inj, recover=False)
+    obs = Observability(audit_memory=True, windows=True)
+    obs.attach_cluster(cluster)
+    tpath = str(tmp_path / "trace.json")
+    mpath = str(tmp_path / "metrics.json")
+    obs.trace.autosave_path = tpath
+    reqs = _wl(cfg, n=6, seed=41, mean_out=30)
+    em = MetricsEmitter(
+        mpath, interval_s=1e9,
+        provider=lambda: collect_from_engine(
+            cluster.replicas[0].engine, reqs, 1.0))
+    with pytest.raises(InjectedFault):
+        with obs.trace, em:
+            cluster.run(reqs)
+    assert validate_chrome_trace(tpath) == []
+    doc = json.load(open(tpath))
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "step" in " ".join(names) or len(doc["traceEvents"]) > 0
+    assert any(r.finish_reason == FINISH_FAILED for r in reqs)
+    m = metrics_from_json(mpath)
+    assert m is not None and m.memgap is not None
+
+
+# ------------------------------------------- series decimation edges ----
+def test_series_maxlen_one_degenerate():
+    s = BoundedSeries(1)
+    for i in range(100):
+        s.append(i)
+    assert len(s) == 1 and s[0] == 0           # anchored at the run start
+    assert s.appended == 100 and s.stride > 1
+    assert s.fresh().maxlen == 1
+
+
+def test_series_odd_maxlen_keeps_anchor_and_bound():
+    s = BoundedSeries(5)
+    for i in range(100):
+        s.append(i)
+    assert 1 <= len(s) <= 5
+    assert s[0] == 0 and s.appended == 100
+    assert list(s) == sorted(s)                # monotone sample positions
+    # whole-run coverage: the newest kept sample is near the end
+    assert s[-1] >= 100 - 2 * s.stride
+
+
+def test_series_decimate_then_append_interleaving():
+    s = BoundedSeries(4)
+    for i in range(4):
+        s.append(i)
+    assert list(s) == [0, 1, 2, 3] and s.stride == 1
+    s.append(4)                                # triggers first decimation
+    assert s.stride == 2 and list(s) == [0, 2, 4]
+    s.append(5)                                # off-stride: skipped
+    assert list(s) == [0, 2, 4]
+    s.append(6)                                # on-stride: kept
+    assert list(s) == [0, 2, 4, 6]
+    s.append(7)
+    s.append(8)                                # full again -> decimate
+    assert s.stride == 4 and list(s) == [0, 4, 8]
+    assert s.appended == 9
+
+
+def test_window_aggregation_over_decimated_series_error():
+    """Aggregates over a decimated series are uniform subsamples of the
+    true population (the documented contract): for a smooth signal the
+    windowed mean/percentiles track the full-resolution values within a
+    few percent, and the sample count reflects the decimation."""
+    n = 2048
+    true_vals = [float(i) for i in range(n)]
+    s = BoundedSeries(256)
+    for v in true_vals:
+        s.append(v)
+    win = WindowAggregator(horizon_s=1e9)
+    win.push_series(STREAM_KV, s, t0=0.0, dt=1.0)
+    st = win.window(STREAM_KV, t_now=float(n) * s.stride, span_s=1e9)
+    assert st.count == len(s) < n
+    true_mean = sum(true_vals) / n
+    true_p50 = float(np.percentile(true_vals, 50))
+    assert abs(st.mean - true_mean) / true_mean < 0.05
+    assert abs(st.p50 - true_p50) / true_p50 < 0.05
+    # timestamps are stride-aware: the last sample sits at its true step
+    assert win.latest(STREAM_KV)[0] == (st.count - 1) * s.stride
+
+
+# ------------------------------------------------------ BCA cross-check ----
+def test_audit_sizing_cross_check(setup):
+    cfg = setup[0]
+    with pytest.raises(ValueError):
+        audit_sizing(cfg, TPU_V5E, 1024, observed_tokens_per_req=0.0)
+    a = audit_sizing(cfg, TPU_V5E, 1024, observed_tokens_per_req=32.0)
+    assert a.assumed_ctx_tokens == 1024
+    assert a.gap_fraction == pytest.approx(1.0 - 32.0 / 1024.0)
+    assert a.achievable_batch >= a.sized_batch      # observed << assumed
+    assert a.headroom_x >= 1.0
+    assert "sized B=" in a.summary()
+    # observing the assumed context means no gap
+    b = audit_sizing(cfg, TPU_V5E, 1024, observed_tokens_per_req=1024.0)
+    assert b.gap_fraction == 0.0

@@ -70,7 +70,7 @@ def test_bounded_series_decimates_above_cap():
 
 def test_bounded_series_validation_and_fresh():
     with pytest.raises(ValueError):
-        BoundedSeries(1)
+        BoundedSeries(0)
     s = BoundedSeries(4)
     for i in range(100):
         s.append(i)
