@@ -81,6 +81,12 @@ def main() -> int:
                          "benchmark (exact pool accounting, reserved-"
                          "unused >= 2x used on worst-case budgets, SLO "
                          "breach/recovery latency, hook overhead)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="also run the host-overlap benchmark "
+                         "(scheduler/executor split: sync-vs-overlap "
+                         "bit identity across six scenarios, decode "
+                         "host-gap fraction <= 5%%, decode steady-state "
+                         "speedup >= 1.15x)")
     ap.add_argument("--no-history", action="store_true",
                     help="do not append this run's claims to "
                          + HISTORY_PATH)
@@ -226,6 +232,28 @@ def main() -> int:
 
         _run("memory_gap", lambda: memgap_suite(smoke=True),
              _memgap_derive)
+
+    if args.overlap:
+        from benchmarks.host_overlap import run_suite as overlap_suite
+
+        def _overlap_derive(o):
+            for key in ("claim_bit_identical_greedy",
+                        "claim_bit_identical_sampled",
+                        "claim_bit_identical_chunked",
+                        "claim_bit_identical_prefix",
+                        "claim_bit_identical_preempt",
+                        "claim_bit_identical_faults",
+                        "claim_host_gap_le_5pct",
+                        "claim_speedup_ge_1_15"):
+                claim(o, key)
+            return (f"gap={o['gap']['decode_gap_fraction'] * 100:.1f}%;"
+                    f"gap_projected={o['gap']['gap_is_projected']};"
+                    f"speedup={o['throughput']['speedup']:.2f}x;"
+                    f"speedup_projected="
+                    f"{o['throughput']['speedup_is_projected']}")
+
+        _run("host_overlap", lambda: overlap_suite(smoke=True),
+             _overlap_derive)
 
     # §Roofline aggregation from the dry-run artifacts, if present
     from benchmarks.roofline_table import load_records, summary

@@ -47,6 +47,15 @@ from repro.models.params import ParamSpec
 from repro.sharding import KV_SEQ
 
 
+@jax.jit
+def _advance_poslen(pos, lens):
+    """Steady-state decode advances every row's write position and
+    length by exactly one: one fused device bump of the cached vectors
+    replaces two host rebuilds + uploads per step (see
+    :meth:`PagedKVCache.view`)."""
+    return pos + 1, lens + 1
+
+
 class BlockManager:
     """Ref-counted free-list block allocator with a vLLM-style watermark.
 
@@ -329,7 +338,13 @@ class PagedKVCache:
                                  is_leaf=is_spec)
         # device block-table cache for the zero-copy view
         self._dev_tables: Optional[jax.Array] = None
+        self._dev_slots: Optional[jax.Array] = None
         self._dev_tables_key: Optional[Tuple] = None
+        self._tables_np: Optional[np.ndarray] = None    # host mirror
+        self._tables_snap: Optional[List[Tuple]] = None  # per-row blocks
+        # (composition key, positions, dev_pos, dev_lens) of the last
+        # view — steady-state steps advance it on device (see view())
+        self._poslen: Optional[Tuple] = None
         # --- byte accounting (memory-gap auditor) ---
         # one physical block's bytes summed across every paged KV leaf;
         # each leaf's block axis holds num_blocks+1 rows (incl. trash),
@@ -560,30 +575,77 @@ class PagedKVCache:
         stays small); padding rows address the trash block/slot and carry
         length 0.
 
-        The ``[batch_pad, nb_pad]`` block-table upload is cached and only
-        rebuilt when the allocator state or the running set changes — in
-        steady-state decode (no admission, no block boundary crossed) the
-        per-step host->device traffic is three [B] vectors.
+        The host->device traffic here sits on the per-step critical path
+        of large-batch decode, so every piece is cached at the right
+        granularity:
+
+        * slots and the ``[batch_pad, nb_pad]`` block table are keyed on
+          the batch *composition* ``(req_ids, nb_pad, batch_pad)``; an
+          allocator ``version`` bump with the composition unchanged (a
+          handful of rows crossed a block boundary — at large batch that
+          is *most* steps) patches only the changed rows of the cached
+          host table instead of rebuilding all of it;
+        * positions/lengths advance by exactly one for every row in an
+          unchanged composition, so steady-state steps bump the cached
+          device vectors with one tiny fused jit instead of two host
+          rebuilds + uploads. Padding lanes then drift to small nonzero
+          positions/lengths (instead of staying 0), which is
+          unobservable: pad rows address the trash block/slot, rows are
+          independent through the model, and nothing ever reads pad
+          outputs or the trash block.
         """
         B = len(req_ids)
         assert B <= batch_pad
-        key = (tuple(req_ids), nb_pad, batch_pad, self.manager.version)
+        ckey = (tuple(req_ids), nb_pad, batch_pad)
+        key = ckey + (self.manager.version,)
         if self._dev_tables_key != key:
-            table = np.full((batch_pad, nb_pad), self.trash_block, np.int32)
-            for i, rid in enumerate(req_ids):
-                blocks = self.manager.tables.get(rid, [])[:nb_pad]
-                table[i, :len(blocks)] = blocks
-            self._dev_tables = jnp.asarray(table)
+            if (self._tables_np is not None
+                    and self._dev_tables_key is not None
+                    and self._dev_tables_key[:3] == ckey):
+                # same rows, allocator moved: patch changed rows only
+                table = self._tables_np
+                snap = self._tables_snap
+                changed = False
+                for i, rid in enumerate(req_ids):
+                    blocks = tuple(self.manager.tables.get(rid, [])[:nb_pad])
+                    if snap[i] != blocks:
+                        table[i, :] = self.trash_block
+                        table[i, :len(blocks)] = blocks
+                        snap[i] = blocks
+                        changed = True
+                if changed:
+                    self._dev_tables = jnp.asarray(table)
+            else:
+                table = np.full((batch_pad, nb_pad), self.trash_block,
+                                np.int32)
+                slots = np.full((batch_pad,), self.trash_slot, np.int32)
+                snap = [()] * batch_pad
+                for i, rid in enumerate(req_ids):
+                    blocks = tuple(self.manager.tables.get(rid, [])[:nb_pad])
+                    table[i, :len(blocks)] = blocks
+                    snap[i] = blocks
+                    slots[i] = self._slot(rid)
+                self._tables_np = table
+                self._tables_snap = snap
+                self._dev_tables = jnp.asarray(table)
+                self._dev_slots = jnp.asarray(slots)
             self._dev_tables_key = key
-        pos = np.zeros((batch_pad,), np.int32)
-        pos[:B] = np.asarray(positions, np.int32)
-        lens = np.zeros((batch_pad,), np.int32)
-        lens[:B] = pos[:B] + 1
-        slots = np.full((batch_pad,), self.trash_slot, np.int32)
-        slots[:B] = [self._slot(rid) for rid in req_ids]
+        pt = tuple(positions)
+        cached = self._poslen
+        if (cached is not None and cached[0] == ckey
+                and all(p == q + 1 for p, q in zip(pt, cached[1]))):
+            dev_pos, dev_lens = _advance_poslen(cached[2], cached[3])
+        else:
+            pos = np.zeros((batch_pad,), np.int32)
+            pos[:B] = np.asarray(positions, np.int32)
+            lens = np.zeros((batch_pad,), np.int32)
+            lens[:B] = pos[:B] + 1
+            dev_pos = jnp.asarray(pos)
+            dev_lens = jnp.asarray(lens)
+        self._poslen = (ckey, pt, dev_pos, dev_lens)
         return PagedCacheView(self.pool, self._dev_tables,
-                              jnp.asarray(lens), jnp.asarray(pos),
-                              jnp.asarray(slots), self.block_size)
+                              dev_lens, dev_pos,
+                              self._dev_slots, self.block_size)
 
     def commit(self, new_pool):
         """Adopt the pool pytree returned by a zero-copy decode step."""

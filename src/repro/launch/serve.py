@@ -38,6 +38,12 @@ def main():
                     help="chunked prefill token budget per mixed step "
                          "(0 = serial admission-time prefill; -1 = size "
                          "the budget from the BCA curves' ITL headroom)")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="double-buffered overlapped stepping: dispatch "
+                         "decode step N+1 while step N's tokens are in "
+                         "flight (scheduler/executor split; outputs are "
+                         "bit-identical to --no-overlap)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share KV blocks across prompts with a common "
                          "prefix (radix prefix cache; skips redundant "
@@ -190,6 +196,7 @@ def main():
                             kv_pool_tokens=(budget // n_rep) // 64 * 64,
                             max_model_len=512, prefill_bucket=64,
                             prefix_cache=args.prefix_cache,
+                            overlap=args.overlap,
                             prefill_chunk_tokens=prefill_chunk,
                             max_waiting=args.max_waiting or None,
                             shed_kv_fraction=args.shed_kv or None)

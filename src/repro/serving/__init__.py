@@ -12,7 +12,10 @@ from repro.serving.metrics import (Percentiles, ServingMetrics,  # noqa
                                    collect_from_engine)
 from repro.serving.cluster import (ClusterMetrics, ReplicatedCluster,  # noqa
                                    autoscale)
-from repro.serving.api import (GenerationOutput, RequestHandle,  # noqa
+from repro.serving.scheduler import Scheduler, StepPlan  # noqa
+from repro.serving.executor import Executor  # noqa
+from repro.serving.api import (AsyncRequestHandle, AsyncServingAPI,  # noqa
+                               GenerationOutput, RequestHandle,
                                ServingAPI)
 from repro.serving.obs import (BoundedSeries, Dashboard,  # noqa
                                LiveRoofline, MemoryGapAuditor,

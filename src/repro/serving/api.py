@@ -41,9 +41,13 @@ restores the backend's wall clock on exit.
 """
 from __future__ import annotations
 
+import asyncio
+import concurrent.futures
 import dataclasses
+import threading
 import time
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import (AsyncIterator, Dict, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -531,3 +535,257 @@ class ServingAPI:
         metrics. Streaming handles are not created — use
         :meth:`submit`/:meth:`drain` for the event-based flow."""
         return self._backend.run(requests)
+
+
+class AsyncRequestHandle:
+    """Caller-side view of one request submitted through
+    :class:`AsyncServingAPI`. Events arrive on a private asyncio queue
+    fed by the pump thread; :meth:`AsyncServingAPI.stream` reads it."""
+
+    def __init__(self, handle: RequestHandle, queue: "asyncio.Queue",
+                 loop: "asyncio.AbstractEventLoop"):
+        self.handle = handle
+        self._queue = queue
+        self._loop = loop
+
+    @property
+    def req_id(self) -> int:
+        return self.handle.req_id
+
+    @property
+    def request(self) -> Request:
+        return self.handle.request
+
+
+class AsyncServingAPI:
+    """Genuinely concurrent asyncio front-end over an engine or cluster.
+
+    Unlike :class:`ServingAPI` — whose ``stream()``/``drain()`` pump the
+    backend cooperatively from the *calling* thread — this class owns a
+    single background **pump thread** that is the only code ever touching
+    the backend. Coroutines interact through two thread-safe channels:
+
+    * a **mailbox** of commands (submit / abort / metrics / drain), each
+      paired with a ``concurrent.futures.Future`` the caller awaits via
+      :func:`asyncio.wrap_future`;
+    * per-request **asyncio queues**: after every scheduling round the
+      pump thread folds each handle's new tokens into
+      :class:`GenerationOutput` events and posts them onto the
+      submitting coroutine's loop with ``loop.call_soon_threadsafe`` —
+      detokenization/stream fan-out thus never blocks the step loop and
+      many ``async for`` consumers stream concurrently.
+
+    The pump thread sleeps on a condition variable while idle (no busy
+    work, empty mailbox) and is woken by submit/abort/drain/close, so an
+    idle async facade burns no CPU and no engine steps. Scheduling order
+    — and therefore output content — is identical to the sync facade:
+    the same ``_pump_once`` runs, just on a dedicated thread.
+
+    Works with both sync and overlapped (``EngineConfig.overlap=True``)
+    engines. Use as an async context manager, or call :meth:`aclose`
+    explicitly; the sync :class:`ServingAPI` is untouched and remains
+    the right tool for single-threaded deterministic tests.
+    """
+
+    _IDLE_WAIT_S = 0.1          # cond-var backstop; wakeups are event-driven
+
+    def __init__(self, backend: Union[ContinuousBatchingEngine,
+                                      ReplicatedCluster], *,
+                 obs=None, emitter=None, dashboard=None):
+        self._api = ServingAPI(backend, obs=obs, emitter=emitter,
+                               dashboard=dashboard)
+        self.backend = backend
+        self._lock = threading.Condition()
+        self._mailbox: List[Tuple[object, concurrent.futures.Future]] = []
+        self._drain_waiters: List[concurrent.futures.Future] = []
+        self._streams: Dict[int, AsyncRequestHandle] = {}
+        self._stop = False
+        self._fail: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._pump_loop, name="async-serving-pump", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------- pump-thread side --
+    def _pump_loop(self):
+        api = self._api
+        while True:
+            with self._lock:
+                while (not self._mailbox and not self._stop
+                       and not self._drain_waiters
+                       and not api._backend.busy):
+                    self._lock.wait(timeout=self._IDLE_WAIT_S)
+                cmds, self._mailbox = self._mailbox, []
+                stopping = self._stop
+            for fn, fut in cmds:
+                if not fut.set_running_or_notify_cancel():
+                    continue
+                try:
+                    fut.set_result(fn())
+                except BaseException as e:   # delivered to the awaiter
+                    fut.set_exception(e)
+            if stopping:
+                self._resolve_drains(final=True)
+                return
+            if api._backend.busy:
+                try:
+                    api._pump_once()
+                except BaseException as e:
+                    self._broadcast_failure(e)
+                    return
+            self._fan_out()
+            if not api._backend.busy:
+                self._resolve_drains(final=False)
+
+    def _fan_out(self):
+        """Post new events for every live stream onto its owner loop."""
+        done: List[int] = []
+        for rid, ah in self._streams.items():
+            h = self._api._handles.get(rid)
+            if h is None:
+                done.append(rid)
+                continue
+            while True:
+                ev = h._next_event()
+                if ev is None:
+                    break
+                ah._loop.call_soon_threadsafe(ah._queue.put_nowait, ev)
+                if ev.finished:
+                    done.append(rid)
+                    break
+        for rid in done:
+            self._streams.pop(rid, None)
+
+    def _resolve_drains(self, *, final: bool):
+        with self._lock:
+            waiters, self._drain_waiters = self._drain_waiters, []
+        if not waiters:
+            return
+        if final:
+            for f in waiters:
+                f.cancel()
+            return
+        result = {rid: h.final_output()
+                  for rid, h in self._api._handles.items()}
+        for f in waiters:
+            if f.set_running_or_notify_cancel():
+                f.set_result(dict(result))
+
+    def _broadcast_failure(self, err: BaseException):
+        """Unrecovered backend error: surface it on every waiter and
+        every open stream, then park the facade as failed."""
+        with self._lock:
+            self._fail = err
+            self._stop = True
+            cmds, self._mailbox = self._mailbox, []
+            waiters, self._drain_waiters = self._drain_waiters, []
+        for _, fut in cmds:
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(err)
+        for f in waiters:
+            if f.set_running_or_notify_cancel():
+                f.set_exception(err)
+        for ah in self._streams.values():
+            ah._loop.call_soon_threadsafe(ah._queue.put_nowait, err)
+        self._streams.clear()
+
+    # -------------------------------------------------- coroutine side --
+    async def _call(self, fn):
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        with self._lock:
+            if self._fail is not None:
+                raise RuntimeError(
+                    "AsyncServingAPI backend failed") from self._fail
+            if self._stop:
+                raise RuntimeError("AsyncServingAPI is closed")
+            self._mailbox.append((fn, fut))
+            self._lock.notify_all()
+        return await asyncio.wrap_future(fut)
+
+    async def submit(self, prompt,
+                     sampling: Optional[SamplingParams] = None, *,
+                     arrival_s: Optional[float] = None) -> AsyncRequestHandle:
+        """Enqueue one request; resolves once the pump thread has routed
+        it (so cluster policies see live load, exactly like the sync
+        facade). Returns an :class:`AsyncRequestHandle` whose event
+        queue is bound to the calling coroutine's loop."""
+        loop = asyncio.get_running_loop()
+        queue: asyncio.Queue = asyncio.Queue()
+
+        def do() -> AsyncRequestHandle:
+            h = self._api.submit(prompt, sampling, arrival_s=arrival_s)
+            ah = AsyncRequestHandle(h, queue, loop)
+            self._streams[h.req_id] = ah
+            return ah
+        return await self._call(do)
+
+    async def stream(self, handle: AsyncRequestHandle
+                     ) -> AsyncIterator[GenerationOutput]:
+        """Async generator of :class:`GenerationOutput` events; ends
+        after the ``finished=True`` event. Multiple handles stream
+        concurrently — the pump thread fans out to all of them."""
+        while True:
+            ev = await handle._queue.get()
+            if isinstance(ev, BaseException):
+                raise RuntimeError(
+                    "AsyncServingAPI backend failed mid-stream") from ev
+            yield ev
+            if ev.finished:
+                return
+
+    async def generate(self, prompt,
+                       sampling: Optional[SamplingParams] = None
+                       ) -> GenerationOutput:
+        """Submit + stream to completion; returns the final event."""
+        handle = await self.submit(prompt, sampling)
+        out: Optional[GenerationOutput] = None
+        async for out in self.stream(handle):
+            pass
+        assert out is not None and out.finished
+        return out
+
+    async def abort(self, handle: Union[AsyncRequestHandle, RequestHandle,
+                                        int]) -> bool:
+        """Cancel a request mid-flight; the handle's stream terminates
+        with a ``finish_reason="abort"`` event on the next fan-out."""
+        rid = handle if isinstance(handle, int) else handle.req_id
+        return await self._call(lambda: self._api.abort(rid))
+
+    async def drain(self) -> Dict[int, GenerationOutput]:
+        """Resolve once everything in flight has completed; returns the
+        final cumulative output per req_id (the async analogue of
+        :meth:`ServingAPI.drain`, without stealing the pump)."""
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        with self._lock:
+            if self._fail is not None:
+                raise RuntimeError(
+                    "AsyncServingAPI backend failed") from self._fail
+            if self._stop:
+                raise RuntimeError("AsyncServingAPI is closed")
+            self._drain_waiters.append(fut)
+            self._lock.notify_all()
+        return await asyncio.wrap_future(fut)
+
+    async def metrics(self) -> Union[ServingMetrics, ClusterMetrics]:
+        return await self._call(self._api.metrics)
+
+    async def aclose(self):
+        """Stop the pump thread (after it finishes the current round).
+        In-flight requests are left as-is; drain first for a clean end."""
+        with self._lock:
+            self._stop = True
+            self._lock.notify_all()
+        await asyncio.get_running_loop().run_in_executor(
+            None, self._thread.join)
+
+    def close(self):
+        """Sync teardown (for non-async test harnesses / atexit paths)."""
+        with self._lock:
+            self._stop = True
+            self._lock.notify_all()
+        self._thread.join()
+
+    async def __aenter__(self) -> "AsyncServingAPI":
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()

@@ -200,6 +200,12 @@ class ReplicatedCluster:
         self._flock = threading.Lock()
         self._threads: dict = {}       # replica idx -> current Thread
         self._joinable: List[threading.Thread] = []
+        # Event-driven wakeups for the threaded mode: replica loops and
+        # the feeder sleep on this condition variable when idle and are
+        # woken by submit (route_one), failure enqueue, thread exit,
+        # feeding-done, and stop — an idle cluster burns no engine steps
+        # (see tests/test_overlap.py::test_idle_cluster_burns_no_steps).
+        self._work = threading.Condition()
 
     # ---------------------------------------------------------- builders --
     @classmethod
@@ -309,7 +315,20 @@ class ReplicatedCluster:
         # replica's stats as a phantom routed-but-never-served entry
         rep.engine.add_request(req)
         rep.requests.append(req)
+        self._notify_work()        # wake the replica's (idle) step loop
         return rep
+
+    def _notify_work(self):
+        with self._work:
+            self._work.notify_all()
+
+    def _idle_wait_s(self) -> float:
+        """Cond-var wait backstop. Kept well under ``watchdog_s`` so the
+        feeder's wedge detection and arrival dispatch never stall behind
+        a sleeping loop (wakeups themselves are event-driven)."""
+        if self.watchdog_s is not None:
+            return min(0.05, self.watchdog_s / 4)
+        return 0.05
 
     def _dispatch(self, pending: deque, now: float):
         while pending and pending[0].arrival_s <= now:
@@ -353,6 +372,10 @@ class ReplicatedCluster:
             self.obs.replica_event(rep.idx, "quarantine",
                                    {"error": f"{type(exc).__name__}: {exc}"})
         eng = rep.engine
+        # drop any overlapped in-flight step: its device buffers die with
+        # the replica's KV, and a stale commit after requeue would double
+        # tokens the redrive regenerates elsewhere
+        eng._executor.reset()
         # strand in admission order (running were admitted first) so
         # redrives keep FCFS service order on the survivors
         stranded = (list(eng.running) + list(eng.prefilling)
@@ -555,12 +578,18 @@ class ReplicatedCluster:
                         while pending:
                             self._mark_failed(pending.popleft(), now)
                     elif pending[0].arrival_s > now:
-                        time.sleep(min(pending[0].arrival_s - now, 0.005))
+                        # cond wait, not sleep: a failure/finish event
+                        # wakes the feeder before the arrival timer does
+                        with self._work:
+                            self._work.wait(timeout=min(
+                                pending[0].arrival_s - now,
+                                self._idle_wait_s()))
                     else:
                         self._dispatch(pending, now)
                 self._sample_queues()
                 if not pending:
                     self._feeding_done = True
+                    self._notify_work()   # idle loops may now exit
                     if all(not t.is_alive()
                            for t in self._threads.values()):
                         # late failures may still be queued; servicing
@@ -570,10 +599,15 @@ class ReplicatedCluster:
                                 all(not t.is_alive()
                                     for t in self._threads.values()):
                             break
-                    time.sleep(0.001)
+                    with self._work:
+                        if any(t.is_alive()
+                               for t in self._threads.values()) \
+                                and not self._failed:
+                            self._work.wait(timeout=self._idle_wait_s())
         finally:
             self._feeding_done = True
             self._stop.set()
+            self._notify_work()
             for t in self._joinable:
                 t.join()
         if self._errors:
@@ -611,15 +645,23 @@ class ReplicatedCluster:
                     self._ensure_thread(rep)
 
     def _replica_loop(self, rep: Replica):
+        """Step while busy; otherwise park on the work condition variable
+        until a submit/failure/stop event (or the backstop timeout) —
+        an idle replica burns **no** engine steps, so ``step_count``
+        measures work, not polling."""
         clock = rep.engine.clock
         try:
             with rep.mesh_ctx():
                 while not self._stop.is_set():
-                    busy = self._step_replica(rep, clock())
-                    if not busy:
-                        if self._feeding_done and not rep.engine.busy:
-                            return
-                        time.sleep(0.001)
+                    if rep.engine.busy:
+                        self._step_replica(rep, clock())
+                        continue
+                    if self._feeding_done:
+                        return
+                    with self._work:
+                        if not rep.engine.busy and not self._feeding_done \
+                                and not self._stop.is_set():
+                            self._work.wait(timeout=self._idle_wait_s())
         except Exception as e:
             if self.recover:
                 # hand off to the feeder thread — recovery must never
@@ -630,6 +672,10 @@ class ReplicatedCluster:
                 self._errors.append(e)
         except BaseException as e:          # KeyboardInterrupt etc.
             self._errors.append(e)
+        finally:
+            # the feeder may be waiting on thread exit or a failure
+            # hand-off; wake it regardless of how this loop ended
+            self._notify_work()
 
     # ----------------------------------------------------------- metrics --
     def _availability(self, rep: Replica, wall: float) -> float:

@@ -103,8 +103,10 @@ from repro.kvcache.view import PagedCacheView
 from repro.models.model import Model
 from repro.models.sampler import (positions_array, sample_tokens,
                                   stack_sampling)
+from repro.serving.executor import Executor
 from repro.serving.faults import FaultInjector
 from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import Scheduler, StepPlan
 from repro.serving.obs.series import DEFAULT_SERIES_MAXLEN, BoundedSeries
 from repro.serving.workload import (FINISH_ABORT, FINISH_DEADLINE,
                                     FINISH_FAILED, FINISH_LENGTH,
@@ -147,6 +149,12 @@ class EngineConfig:
     # cap on cached blocks held by the index (None = bounded only by
     # LRU eviction under the pool watermark)
     prefix_cache_blocks: Optional[int] = None
+    # double-buffered overlapped stepping (scheduler/executor split):
+    # dispatch step N+1 before fetching step N's tokens, so host
+    # bookkeeping runs under device execution instead of serializing
+    # with it. Outputs are bit-identical to the synchronous loop; the
+    # observable differences are timing-only (see serving.executor).
+    overlap: bool = False
     # chunked prefill (Sarathi-style mixed steps): per-step token budget
     # for prompt chunks scheduled alongside the running decode batch.
     # None = serial admission-time prefill (the HOL-blocking legacy mode,
@@ -305,15 +313,15 @@ class ContinuousBatchingEngine:
         # ring caches (sliding window) aren't paged — fall back to gather
         self.decode_mode = ("gather" if self.cfg.sliding_window
                             else ecfg.decode_mode)
-        self.waiting: deque = deque()
-        self.running: List[Request] = []
-        # PREFILLING phase (chunked mode): admitted requests whose prompt
-        # is still streaming into the pool, FCFS; _prefilled tracks how
-        # many prompt tokens are already written
-        self.prefilling: List[Request] = []
-        self._prefilled: Dict[int, int] = {}
-        self._tokens: Dict[int, int] = {}        # rid -> next input token
-        self._pos: Dict[int, int] = {}           # rid -> write position
+        # scheduler/executor split: request-phase state (queues, token /
+        # position bookkeeping) and all admission / preemption / deadline
+        # decisions live on the Scheduler; the Executor owns the
+        # overlapped dispatch-ahead window. The engine re-exports the
+        # scheduler's state through delegating properties below, so
+        # existing callers keep reading ``eng.waiting`` / ``eng.running``
+        # / ``eng._pos`` unchanged.
+        self.sched = Scheduler(self)
+        self._executor = Executor(self)
         # chunked prefill needs the same per-token-addressable KV as the
         # prefix cache (a chunk attends over gathered pool blocks)
         self.chunking = False
@@ -363,9 +371,6 @@ class ContinuousBatchingEngine:
         self.faults: Optional[FaultInjector] = None
         self.replica_id = 0
         self.step_count = 0          # step() calls, counted from 1
-        # deadlines are only scanned for when at least one admitted
-        # request carries one (keeps the fault-free hot loop unchanged)
-        self._has_deadlines = False
         # observability hook sink (serving.obs): None = detached, every
         # hook site is one attribute check; Observability.attach installs
         # an EngineObserver here
@@ -400,6 +405,67 @@ class ContinuousBatchingEngine:
         self.shed_reasons: Dict[str, int] = {}
         self.queued_aborts = 0       # aborts caught in the arrival queue
 
+    # -------------------------------------------- scheduler state views --
+    # The scheduler owns this state since the scheduler/executor split;
+    # these delegating properties keep the engine's historical surface
+    # (tests, cluster recovery, router load views all read it). Setters
+    # forward too — the sync step still assigns ``self.running``.
+    @property
+    def waiting(self) -> deque:
+        return self.sched.waiting
+
+    @waiting.setter
+    def waiting(self, v):
+        self.sched.waiting = v
+
+    @property
+    def running(self) -> List[Request]:
+        return self.sched.running
+
+    @running.setter
+    def running(self, v):
+        self.sched.running = v
+
+    @property
+    def prefilling(self) -> List[Request]:
+        return self.sched.prefilling
+
+    @prefilling.setter
+    def prefilling(self, v):
+        self.sched.prefilling = v
+
+    @property
+    def _prefilled(self) -> Dict[int, int]:
+        return self.sched._prefilled
+
+    @_prefilled.setter
+    def _prefilled(self, v):
+        self.sched._prefilled = v
+
+    @property
+    def _tokens(self) -> Dict[int, int]:
+        return self.sched._tokens
+
+    @_tokens.setter
+    def _tokens(self, v):
+        self.sched._tokens = v
+
+    @property
+    def _pos(self) -> Dict[int, int]:
+        return self.sched._pos
+
+    @_pos.setter
+    def _pos(self, v):
+        self.sched._pos = v
+
+    @property
+    def _has_deadlines(self) -> bool:
+        return self.sched._has_deadlines
+
+    @_has_deadlines.setter
+    def _has_deadlines(self, v):
+        self.sched._has_deadlines = v
+
     # ------------------------------------------------------------- admin --
     @property
     def busy(self) -> bool:
@@ -423,63 +489,21 @@ class ContinuousBatchingEngine:
             self.obs.on_submit(req)
 
     # ----------------------------------------------- admission control --
+    # (logic lives on the Scheduler since the scheduler/executor split;
+    # these thin delegators preserve the engine's public surface)
     def estimated_queue_delay_s(self) -> float:
-        """Rough wait estimate for a newly queued request: tokens already
-        committed ahead of it (queued prompts + their output budgets)
-        over the recently measured token throughput. Zero until the
-        engine has decode samples to estimate from — admission control
-        never sheds on a cold start."""
-        itl = self.itl_samples[-32:]
-        toks = self.decode_token_samples[-32:]
-        if not itl or not sum(toks):
-            return 0.0
-        tok_per_s = sum(toks) / max(sum(itl), 1e-9)
-        ahead = sum(r.prompt_len + r.sampling.max_new_tokens
-                    for r in self.waiting)
-        return ahead / tok_per_s
+        """See :meth:`repro.serving.scheduler.Scheduler
+        .estimated_queue_delay_s`."""
+        return self.sched.estimated_queue_delay_s()
 
     def shed_check(self, req: Request, now: float) -> Optional[str]:
         """Would admission control reject ``req`` submitted at ``now``?
-
-        Returns the shed reason (``queue_full`` / ``kv_pressure`` /
-        ``queue_delay`` / ``deadline_unmeetable``) or None to accept.
-        Pure — the caller decides whether to actually shed (see
-        :meth:`try_add_request` and the cluster's routed admission).
-        All policies default off; an engine with no shedding knobs and
-        no deadlines accepts everything, exactly as before.
-        """
-        ecfg = self.ecfg
-        if ecfg.max_waiting is not None \
-                and len(self.waiting) >= ecfg.max_waiting:
-            return "queue_full"
-        if ecfg.shed_kv_fraction is not None and self.waiting \
-                and self.pool.manager.used_fraction >= ecfg.shed_kv_fraction:
-            return "kv_pressure"
-        if ecfg.shed_queue_delay_s is not None or req.sampling.has_deadline:
-            est = self.estimated_queue_delay_s()
-            if ecfg.shed_queue_delay_s is not None \
-                    and est > ecfg.shed_queue_delay_s:
-                return "queue_delay"
-            # a request whose queue wait alone already blows its own
-            # deadline would only be admitted to expire — reject now so
-            # the caller can fail fast / try elsewhere
-            dl = req.sampling.ttft_deadline_s
-            if dl is None:
-                dl = req.sampling.deadline_s
-            if dl is not None and max(now, req.arrival_s) + est \
-                    > req.arrival_s + dl:
-                return "deadline_unmeetable"
-        return None
+        See :meth:`repro.serving.scheduler.Scheduler.shed_check`."""
+        return self.sched.shed_check(req, now)
 
     def shed_request(self, req: Request, now: float, reason: str):
-        """Stamp a rejected request (it never entered any queue): KV-free
-        by construction, finished with ``finish_reason="shed"``."""
-        req.state.finish_reason = FINISH_SHED
-        req.state.t_done = max(now, req.arrival_s)
-        self.shed += 1
-        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
-        if self.obs is not None:
-            self.obs.on_shed(req, reason)
+        """See :meth:`repro.serving.scheduler.Scheduler.shed_request`."""
+        self.sched.shed_request(req, now, reason)
 
     def try_add_request(self, req: Request, now: float) -> Optional[str]:
         """Admission-controlled enqueue: shed (returning the reason) or
@@ -540,6 +564,10 @@ class ContinuousBatchingEngine:
         self.pool.release(req.req_id)
         self._tokens.pop(req.req_id, None)
         self._pos.pop(req.req_id, None)
+        self.sched._dispatched.pop(req.req_id, None)
+        # any still-in-flight speculative token for this request must
+        # never commit (no-op in sync mode — nothing is ever in flight)
+        self._executor.invalidate(req.req_id)
         if self.obs is not None:
             self.obs.on_finish(req, reason)
 
@@ -629,115 +657,12 @@ class ContinuousBatchingEngine:
         return None
 
     def _expire_deadlines(self, now: float):
-        """Finish every request past its SLO, whichever phase it is in:
-        queued (never starts), PREFILLING (partial prompt KV released),
-        or decoding (partial output kept, blocks + prefix-cache pins
-        released this same step — the abort/reclaim path). Gated on
-        ``_has_deadlines`` so deadline-free serving pays nothing."""
-        if not self._has_deadlines:
-            return
-        for lst in (self.waiting, self.prefilling, self.running):
-            expired = [r for r in lst if r.sampling.expired(
-                r.arrival_s, now,
-                first_token=r.state.t_first_token is not None)]
-            for req in expired:
-                lst.remove(req)
-                self._prefilled.pop(req.req_id, None)
-                self._finish(req, max(now, req.arrival_s),
-                             reason=FINISH_DEADLINE)
-                self.deadline_expired += 1
+        """See :meth:`repro.serving.scheduler.Scheduler.expire_deadlines`."""
+        self.sched.expire_deadlines(now)
 
     def _admit(self, now: float):
-        mgr = self.pool.manager
-        if self.faults is not None and self.faults.steals_allocation(
-                self.replica_id, self.step_count):
-            # injected transient allocation failure: admission skips a
-            # step (requests wait, shed, or expire — never a crash)
-            return
-        while (self.waiting
-               and len(self.running) + len(self.prefilling)
-               < self.ecfg.max_batch
-               and self.waiting[0].arrival_s <= now):
-            req = self.waiting[0]
-            # the prefix cache turns part of the prompt into shared blocks:
-            # only the uncached suffix consumes free blocks. Pin the hit
-            # with bare increfs *before* any eviction can reclaim the
-            # matched nodes — incref doesn't touch tables/version, so a
-            # capacity-blocked head request retrying every step does not
-            # invalidate the cached device block-table upload.
-            hit: List[int] = []
-            if self.prefix is not None:
-                hit = self.prefix.match(req.prompt)
-                for b in hit:
-                    mgr.incref(b)
-            n_cached = len(hit) * self.ecfg.block_size
-            if self.chunking:
-                # chunked admission reserves only the first chunk's
-                # blocks — the rest of the prompt streams in chunk by
-                # chunk through _prefill_step's watermark-checked extends
-                first = min(self.ecfg.prefill_chunk_tokens,
-                            req.prompt_len + 1 - n_cached)
-                need_new = mgr.blocks_needed(n_cached + first) - len(hit)
-            else:
-                need_new = mgr.blocks_needed(req.prompt_len + 1) - len(hit)
-            short = need_new + mgr.watermark_blocks - mgr.free_blocks
-            # only flush warm cache entries when eviction can plausibly
-            # close the whole gap (cached_blocks is an upper bound on the
-            # evictable count) — an oversized head request must not wipe
-            # other tenants' cached prefixes just to stay queued anyway
-            if self.prefix is not None \
-                    and 0 < short <= self.prefix.cached_blocks:
-                self.prefix.evict(short)
-            if mgr.free_blocks - need_new < mgr.watermark_blocks:
-                for b in hit:               # unpin (cache ref remains)
-                    mgr.decref(b)
-                if not self.running and not self.prefilling:
-                    # nothing in flight will ever free a block: flushing
-                    # the whole cache is the only way forward; if even
-                    # that cannot fit the head request, fail loudly
-                    # instead of spinning forever
-                    evictable = (self.prefix.cached_blocks
-                                 if self.prefix is not None else 0)
-                    if (mgr.free_blocks + evictable - need_new
-                            < mgr.watermark_blocks):
-                        raise RequestTooLarge(
-                            f"KV pool exhausted: request {req.req_id} "
-                            f"(prompt_len={req.prompt_len}) needs "
-                            f"{need_new} blocks but the idle pool has "
-                            f"{mgr.free_blocks} free ({mgr.num_blocks} "
-                            f"total, {mgr.watermark_blocks} reserved) — "
-                            f"raise kv_pool_tokens or lower max_model_len",
-                            req.req_id)
-                    self.prefix.evict(need_new + mgr.watermark_blocks
-                                      - mgr.free_blocks)
-                    continue                # retry the same head request
-                break
-            self.waiting.popleft()
-            if self.obs is not None:
-                self.obs.on_admit(req)
-            if hit:
-                mgr.share(req.req_id, hit)
-                for b in hit:               # table ref replaces the pin
-                    mgr.decref(b)
-            if self.prefix is not None:
-                self.prefix.record_admit(req.prompt_len, n_cached)
-            if self.chunking:
-                # actually take the blocks the capacity check above was
-                # sized for — admission must be a *reservation*, or a
-                # second admission in the same loop double-books the
-                # same free blocks and forces churny preemption of
-                # half-prefilled requests later
-                mgr.extend(req.req_id, n_cached + first)
-                self._prefilled[req.req_id] = n_cached
-                self.prefilling.append(req)
-                continue
-            mgr.allocate(req.req_id, req.prompt_len + 1 - n_cached)
-            # prefill emitted the first output token (int() inside
-            # _complete_prefill synced), so TTFT is stamped there, not
-            # at the first decode step
-            self._complete_prefill(req, self._prefill(req,
-                                                      n_cached=n_cached),
-                                   now)
+        """See :meth:`repro.serving.scheduler.Scheduler.admit`."""
+        self.sched.admit(now)
 
     def _complete_prefill(self, req: Request, logits, now: float):
         """The one completion protocol both prefill modes share (the
@@ -753,6 +678,10 @@ class ContinuousBatchingEngine:
             positions_array([req.prompt_len]))[0])
         self._tokens[rid] = tok
         self._pos[rid] = req.prompt_len
+        # prefill's token counts as dispatched AND committed (the int()
+        # above already fetched it) — the overlap planner's length gate
+        # starts from here
+        self.sched._dispatched[rid] = 1
         req.generated = 1       # prefill produced the first output token
         req.output_tokens.append(tok)
         if self.prefix is not None:
@@ -833,70 +762,13 @@ class ContinuousBatchingEngine:
 
     # ------------------------------------------------- chunked prefill --
     def _prefill_step(self, now: float) -> int:
-        """Run up to ``prefill_chunk_tokens`` prompt tokens of chunked
-        prefill, FCFS across PREFILLING requests (leftover budget flows
-        to the next request in line). Returns prompt tokens computed.
-
-        This is the prefill half of the mixed step: together with the
-        decode batch the caller launches right after, one engine
-        iteration serves {every running decode} ∪ {<= budget prompt
-        tokens}, so a long prompt can never freeze the decode loop for
-        longer than one chunk.
-        """
-        if not self.chunking or not self.prefilling:
-            return 0
-        budget = self.ecfg.prefill_chunk_tokens
-        spent = 0
-        while budget > 0 and self.prefilling:
-            req = self.prefilling[0]
-            rid = req.req_id
-            done = self._prefilled[rid]
-            remaining = req.prompt_len - done
-            chunk = min(budget, remaining)
-            final = chunk == remaining
-            # final chunk also covers the first decode token's slot, the
-            # same +1 the serial path allocates at admission
-            target = done + chunk + (1 if final else 0)
-            if not self._reserve_for_chunk(rid, target):
-                break                    # strict FCFS: wait for blocks
-            logits = self._run_chunk(req, done, chunk)
-            self._prefilled[rid] = done + chunk
-            spent += chunk
-            budget -= chunk
-            if final:
-                self.prefilling.pop(0)
-                self._prefilled.pop(rid, None)
-                self._complete_prefill(req, logits, now)
-        return spent
+        """See :meth:`repro.serving.scheduler.Scheduler.prefill_step`."""
+        return self.sched.prefill_step(now)
 
     def _reserve_for_chunk(self, rid: int, target_tokens: int) -> bool:
-        """Extend ``rid``'s block table to cover ``target_tokens``,
-        respecting the admission watermark. Under pressure: reclaim
-        cache-only prefix blocks first; if nothing is decoding (so no
-        block will free itself), preempt the youngest *other* prefilling
-        request; a lone request that cannot fit fails loudly."""
-        mgr = self.pool.manager
-        while True:
-            short = target_tokens - mgr.covered_tokens(rid)
-            if short <= 0:
-                return True
-            need = mgr.blocks_needed(short)
-            gap = need + mgr.watermark_blocks - mgr.free_blocks
-            if self.prefix is not None \
-                    and 0 < gap <= self.prefix.cached_blocks:
-                self.prefix.evict(gap)
-            if mgr.can_allocate(short):
-                mgr.extend(rid, target_tokens)
-                return True
-            if self.running:
-                return False             # decode completions free blocks
-            victims = [r for r in self.prefilling if r.req_id != rid]
-            if not victims:
-                raise RequestTooLarge(
-                    "KV pool exhausted: a single request's prompt exceeds "
-                    "pool capacity (raise kv_pool_tokens or lower "
-                    "max_model_len)", rid)
-            self._preempt(victims[-1])
+        """See :meth:`repro.serving.scheduler.Scheduler
+        ._reserve_for_chunk`."""
+        return self.sched._reserve_for_chunk(rid, target_tokens)
 
     def _run_chunk(self, req: Request, done: int, chunk: int):
         """Prefill prompt positions ``[done, done + chunk)``: attend over
@@ -944,95 +816,55 @@ class ContinuousBatchingEngine:
 
     # -------------------------------------------------------- preemption --
     def _preempt(self, req: Request):
-        """Recompute-style preemption: release everything, requeue first.
-
-        Works for RUNNING and half-PREFILLED requests alike (the caller
-        removes it from ``running``; ``prefilling`` membership and chunk
-        progress are cleared here) — re-admission redoes the prefix match
-        and restreams the prompt, and greedy decode regenerates identical
-        tokens."""
-        rid = req.req_id
-        if req in self.prefilling:
-            self.prefilling.remove(req)
-        self._prefilled.pop(rid, None)
-        self.pool.release(rid)
-        self._tokens.pop(rid, None)
-        self._pos.pop(rid, None)
-        req.state.reset_for_requeue()
-        self.waiting.appendleft(req)
-        self.preemptions += 1
-        if self.obs is not None:
-            self.obs.on_preempt(req)
+        """See :meth:`repro.serving.scheduler.Scheduler.preempt`."""
+        self.sched.preempt(req)
 
     def _ensure_step_capacity(self):
-        """Make sure every running request can take this step's token.
-
-        ``BlockManager.append_token`` may dip into the admission
-        watermark reserve, so a request crossing a block boundary (or
-        needing a copy-on-write fork of a shared tail block) with an
-        empty free list would raise mid-step. Instead: first reclaim
-        cache-only blocks from the prefix index (cold cached prefixes are
-        the cheapest memory in the pool), then preempt half-prefilled
-        requests youngest-first (no generated tokens lost, only partial
-        prompt KV), then the *youngest* running requests (their blocks
-        free immediately) until the survivors fit.
-        """
-        mgr = self.pool.manager
-        while True:
-            need = 0
-            for r in self.running:
-                pos = self._pos[r.req_id]
-                if mgr.needs_block(r.req_id, pos + 1) \
-                        or mgr.needs_cow(r.req_id, pos):
-                    need += 1
-            if need <= mgr.free_blocks:
-                return
-            if self.prefix is not None \
-                    and self.prefix.evict(need - mgr.free_blocks):
-                continue
-            if self.prefilling:
-                self._preempt(self.prefilling[-1])
-                continue
-            if len(self.running) <= 1:
-                raise RequestTooLarge(
-                    "KV pool exhausted: a single request exceeds pool "
-                    "capacity (raise kv_pool_tokens or lower max_model_len)",
-                    self.running[0].req_id)
-            self._preempt(self.running.pop())
+        """See :meth:`repro.serving.scheduler.Scheduler
+        .ensure_step_capacity`."""
+        self.sched.ensure_step_capacity()
 
     # -------------------------------------------------------------- step --
     def step(self, now: float) -> bool:
-        """One engine iteration: admission + prefill work (serial prefill
-        or budgeted chunks) + one batched decode. Returns False when
-        fully idle.
+        """One engine iteration. Returns False when fully idle.
+
+        Since the scheduler/executor split the step body is a thin
+        driver: :meth:`Scheduler.plan` makes every decision (admission,
+        prefill work, preemption, deadlines, decode batch selection) and
+        then either
+
+        * **sync mode** (default): the decode jit runs inline, its
+          outputs are fetched immediately, and bookkeeping + telemetry
+          run with the exact legacy timing semantics (the step timer
+          covers plan start through host bookkeeping), or
+        * **overlap mode** (``EngineConfig.overlap``): the
+          :class:`~repro.serving.executor.Executor` dispatches this
+          plan's decode before committing the *previous* step's results,
+          so host work runs under device execution (see
+          ``serving/executor.py`` for the full semantics).
 
         The step timer starts *before* admission, so prefill stalls are
-        visible in ITL (serially-prefilled long prompts used to stall
-        every running decode invisibly, because the timer started after
-        ``_admit``); the prefill share of each step is also recorded
+        visible in ITL; the prefill share of each step is recorded
         separately in ``stall_samples``.
         """
         self.step_count += 1
         if self.faults is not None:
             # may sleep (delay — the watchdog's trigger) or raise
             # InjectedFault (kill — the cluster's quarantine trigger);
-            # raised before any mutation, so host bookkeeping stays
-            # consistent (the KV is treated as lost either way)
+            # raised on the host before any mutation *and before any
+            # dispatch*, so injected faults stay ordered even in overlap
+            # mode (only genuine device errors defer — see executor)
             self.faults.on_step(self.replica_id, self.step_count)
-        t0 = time.perf_counter()
-        pf0 = self.prefill_tokens_computed
-        p0 = self.preemptions
-        self._expire_deadlines(now)
-        self._admit(now)
-        self._prefill_step(now)
-        n_prefill = self.prefill_tokens_computed - pf0
-        t_sched = time.perf_counter() - t0
-        if not self.running:
+        if self.ecfg.overlap:
+            return self._executor.step(now)
+        plan = self.sched.plan(now)
+        t0, t_sched, n_prefill = plan.t0, plan.t_sched, plan.n_prefill
+        if not plan.has_decode:
             if n_prefill:          # prefill-only step: keep the series
                 self.stall_samples.append(t_sched)
                 self.prefill_token_samples.append(n_prefill)
                 self.decode_token_samples.append(0)
-                self.preemption_samples.append(self.preemptions - p0)
+                self.preemption_samples.append(self.preemptions - plan.p0)
                 # KV streamed in without a decode step to sample it
                 self.kv_fraction_samples.append(
                     self.pool.manager.used_fraction)
@@ -1042,18 +874,7 @@ class ContinuousBatchingEngine:
                     self.obs.end_step(self, t0=t0, t_sched_s=t_sched,
                                       n_prefill=n_prefill, n_decode=0)
             return self.busy
-        self._ensure_step_capacity()
-        reqs = self.running                    # preemption may have shrunk it
-        rids = [r.req_id for r in reqs]
-        # ensure capacity for the token being written this step, and fork
-        # (copy-on-write) any shared block the write would land in. The
-        # COW case is unreachable for engine-spliced prefixes (match()
-        # shares only full blocks below prompt_len, and writes start at
-        # prompt_len), so this is a two-dict-lookup guard for direct
-        # pool.share users and future partial-tail sharing.
-        for rid in rids:
-            self.pool.manager.append_token(rid, self._pos[rid] + 1)
-            self.pool.ensure_writable(rid, self._pos[rid])
+        reqs = plan.reqs
         if self.decode_mode == "paged":
             next_tokens = self._decode_paged(reqs)
         else:
@@ -1063,7 +884,7 @@ class ContinuousBatchingEngine:
         self.stall_samples.append(t_sched)
         self.prefill_token_samples.append(n_prefill)
         self.decode_token_samples.append(len(reqs))
-        self.preemption_samples.append(self.preemptions - p0)
+        self.preemption_samples.append(self.preemptions - plan.p0)
         self.batch_samples.append(len(reqs))
         self.kv_fraction_samples.append(self.pool.manager.used_fraction)
         self.max_kv_fraction = max(self.max_kv_fraction,
@@ -1071,7 +892,8 @@ class ContinuousBatchingEngine:
         # bookkeeping (no TTFT re-stamp here: _post_prefill always stamps
         # t_first_token when prefill emits the first token, and preempted
         # requests get re-stamped on re-admission — a re-stamp on decode
-        # could only mis-stamp)
+        # could only mis-stamp). Sync mode advances ``_pos`` here, at
+        # commit (overlap advances it at plan time — see Scheduler.plan).
         still = []
         for i, r in enumerate(reqs):
             self._pos[r.req_id] += 1

@@ -1,0 +1,451 @@
+"""Executor: double-buffered overlapped step dispatch.
+
+JAX dispatch is already asynchronous — a jitted call returns device
+*futures* immediately and XLA executes in the background. The legacy
+engine threw that away: every decode path called ``np.asarray`` /
+``jax.block_until_ready`` on its outputs before doing host bookkeeping,
+so scheduling, detokenization fan-out, and metrics all serialized with
+device execution and the device idled for the whole host phase of every
+step (the ``host_gap_fraction`` the observability layer measures).
+
+This module is the *dispatch* half of the scheduler/executor split. Under
+``EngineConfig.overlap`` each engine iteration ``i`` runs:
+
+    plan i   -> scheduler decisions on host state only (no token values)
+    dispatch i -> launch the decode jit for plan i, non-blocking
+    commit i-1 -> fetch step i-1's tokens (usually already on host),
+                  run bookkeeping / finish protocol / telemetry
+
+so the device computes step ``i`` while the host commits step ``i-1`` —
+steady-state step time approaches ``max(host, device)`` instead of
+``host + device``. Up to two steps stay in flight between iterations
+(commit runs two behind dispatch): with a single buffered step the
+device queue drains whenever one host iteration outruns one device step,
+charging the next dispatch's host-side prep (view build, token chain,
+sampling stack) as device idle; with two, the device only starves when
+the host falls behind by *two* full steps.
+
+Bit-identity with the synchronous loop (the acceptance bar every PR in
+this repo holds decode changes to):
+
+* step ``i``'s input token for a chained request is selected *on device*
+  from step ``i-1``'s output vector (a tiny jitted ``where``/gather —
+  :func:`_chain_tokens_fn`), so the values are the same ones the sync
+  loop would have copied through the host;
+* plans only consult host-knowable state (positions, dispatch counts,
+  block tables) — see :mod:`repro.serving.scheduler`;
+* a stop-token finish is discovered at commit time *after* later steps
+  were dispatched: the finished request's rows in every still-in-flight
+  step (at most two) are invalidated and their tokens discarded without
+  ever touching ``output_tokens`` (committed-tokens-only semantics).
+  Aborts, deadline expiries, and preemptions funnel through the same
+  :meth:`Executor.invalidate`.
+
+Pool safety under speculation: every pool mutation is a dispatched
+``.at[].set`` chained through the donated pool pytree, so a discarded
+step's KV writes land in blocks its victim owned at dispatch time; by the
+time any new owner reads those blocks its own writes (dispatched later)
+have been sequenced after them.
+
+Error ordering (the one place overlap changes semantics): injected faults
+(``faults.on_step``) and scheduler errors (``RequestTooLarge``) are raised
+on the host at *plan* time, before any dispatch — exactly as in sync
+mode. A genuine device-side error from step N, however, surfaces at the
+deferred fetch during iteration N+1; the executor annotates the exception
+with the originating engine step (``err.engine_step = N`` plus an
+``add_note`` on Python >= 3.11) so attribution stays unambiguous.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sampler import positions_array, stack_sampling
+from repro.serving.scheduler import StepPlan
+
+
+def _chain_tokens_fn(prev, host_tokens, prev_rows, use_prev):
+    """Step i's input tokens without a host round-trip: rows chained to
+    the in-flight step i-1 gather from its (device) output vector, the
+    rest come from host-committed values (prefill first tokens, tokens
+    committed before a preemption re-admit)."""
+    return jnp.where(use_prev, prev[prev_rows], host_tokens)
+
+
+_chain_tokens = jax.jit(_chain_tokens_fn)
+
+
+def _is_ready(arr) -> bool:
+    """Non-blocking completion probe (jax.Array.is_ready; jax >= 0.4)."""
+    try:
+        return bool(arr.is_ready())
+    except AttributeError:      # pragma: no cover - very old jax
+        return False
+
+
+class InFlightStep:
+    """One dispatched-but-uncommitted decode step."""
+    __slots__ = ("plan", "tokens", "batch", "valid", "sc",
+                 "t_call", "t_ret", "t_seen_ready")
+
+    def __init__(self, plan: StepPlan, tokens, batch: int, sc,
+                 t_call: float, t_ret: float):
+        self.plan = plan
+        self.tokens = tokens          # device array; [batch_pad] or [B]
+        self.batch = batch
+        # per-row validity: rows are discarded (never committed) when
+        # their request finishes / aborts / expires / is preempted while
+        # the step is still in flight
+        self.valid = [True] * batch
+        self.sc = sc                  # StepCensus (obs attached) or None
+        self.t_call = t_call          # perf_counter at dispatch call
+        self.t_ret = t_ret            # perf_counter at dispatch return
+        # first step start at which a non-blocking probe saw the result
+        # ready (tightens the completion-time estimate — see _commit)
+        self.t_seen_ready: Optional[float] = None
+
+
+class Executor:
+    """Owns the in-flight window (depth <= 2 between iterations — see
+    ``DEPTH``) and the deferred fetch/commit path. Engine-internal: the
+    engine's ``step()`` routes here when ``EngineConfig.overlap`` is set;
+    sync mode never touches it (beyond the no-op ``invalidate`` calls in
+    ``_finish``)."""
+
+    # in-flight steps retained across iterations. 1 = classic double
+    # buffering; 2 keeps the device queue non-empty unless the host falls
+    # two full device steps behind, hiding the dispatch-prep bubble that
+    # otherwise shows up as a ~host-prep-sized gap on every step where
+    # the device finished early. Correctness does not depend on the
+    # value: commits lag dispatches by DEPTH, row invalidation covers
+    # every retained step, and the chain map always points at the newest
+    # entry (see _input_tokens).
+    DEPTH = 2
+
+    def __init__(self, engine):
+        self.eng = engine
+        self._inflight: List[InFlightStep] = []
+        # (key, device arrays) for the stacked sampling params: they are
+        # frozen per request, so the stack only changes when the decode
+        # batch's composition does (finish / admit / preempt)
+        self._samp_cache: Tuple[Optional[Tuple], Optional[Tuple]] = \
+            (None, None)
+        # rid -> (entry, row): where an active request's newest
+        # uncommitted token lives; consumed by the next dispatch, cleared
+        # at commit / invalidation
+        self._chain: Dict[int, Tuple[InFlightStep, int]] = {}
+        self._t_last_commit: Optional[float] = None
+        # previous committed step's estimated device-completion time and
+        # dispatch-call time (the overlap attribution anchors)
+        self._prev_ready_est: Optional[float] = None
+        self._prev_t_call: Optional[float] = None
+        self._preempt_seen = 0
+
+    # ---------------------------------------------------------- control --
+    def reset(self):
+        """Drop every in-flight step without committing (cluster
+        quarantine: the pool is being rebuilt, the results are garbage)."""
+        self._inflight.clear()
+        self._chain.clear()
+        self._samp_cache = (None, None)
+        self._t_last_commit = None
+        self._prev_ready_est = None
+        self._prev_t_call = None
+
+    def invalidate(self, rid: int):
+        """A request left the active set (finish / abort / deadline /
+        preempt / evict): discard its uncommitted in-flight rows so the
+        speculative tokens never reach ``output_tokens``, and drop any
+        step whose rows are now all dead (it commits nothing and emits no
+        phase sample)."""
+        self._chain.pop(rid, None)
+        if not self._inflight:
+            return
+        for entry in list(self._inflight):
+            hit = False
+            for i, r in enumerate(entry.plan.rids):
+                if r == rid and entry.valid[i]:
+                    entry.valid[i] = False
+                    hit = True
+            if hit and not any(entry.valid):
+                self._inflight.remove(entry)
+
+    # ------------------------------------------------------------- step --
+    def step(self, now: float) -> bool:
+        """One overlapped iteration: plan i, dispatch i, commit i-1."""
+        eng = self.eng
+        t_start = time.perf_counter()
+        # non-blocking probe: if the in-flight result is already on
+        # device-complete before we even start planning, remember when we
+        # saw it — the commit's completion-time estimate uses it to
+        # expose host-bound gaps that a fetch-after-dispatch loop would
+        # otherwise hide (the fetch then never waits, so fetch timing
+        # alone always reads "device was ready", gap 0)
+        for entry in self._inflight:
+            if entry.t_seen_ready is None and _is_ready(entry.tokens):
+                entry.t_seen_ready = t_start
+        plan = eng.sched.plan(now)
+        if plan.has_decode:
+            self._dispatch(plan)
+        # commit everything beyond the retained window; with no new
+        # dispatch this drains the pipeline (idle / prefill-only /
+        # all-at-budget iterations still retire in-flight work)
+        keep = self.DEPTH if plan.has_decode else 0
+        while len(self._inflight) > keep:
+            self._commit(self._inflight.pop(0))
+        if not plan.has_decode and plan.n_prefill:
+            # prefill-only iteration: same series the sync loop keeps
+            eng.stall_samples.append(plan.t_sched)
+            eng.prefill_token_samples.append(plan.n_prefill)
+            eng.decode_token_samples.append(0)
+            delta = max(0, eng.preemptions - self._preempt_seen)
+            self._preempt_seen = eng.preemptions
+            eng.preemption_samples.append(delta)
+            eng.kv_fraction_samples.append(eng.pool.manager.used_fraction)
+            eng.max_kv_fraction = max(eng.max_kv_fraction,
+                                      eng.pool.manager.used_fraction)
+            if eng.obs is not None:
+                eng.obs.end_step(eng, t0=plan.t0, t_sched_s=plan.t_sched,
+                                 n_prefill=plan.n_prefill, n_decode=0)
+        return eng.busy or bool(self._inflight)
+
+    # --------------------------------------------------------- dispatch --
+    def _input_tokens(self, rids: List[int], pad: int):
+        """Build the step's input-token vector ([pad] int32, on device).
+
+        Chained rows (previous token still in flight) never touch the
+        host; everything else reads the committed ``_tokens`` value —
+        both paths carry the exact value the sync loop would pass."""
+        eng = self.eng
+        # steady-state fast path: every row chains to the newest in-flight
+        # step at the same row index, so its output vector IS this step's
+        # input — no host arrays, no chain jit. Padding lanes then carry
+        # that step's (valid-vocab) pad samples instead of zeros, which is
+        # unobservable: rows are independent through the model, pad rows
+        # have length 0 and write to the trash slot, and commits only read
+        # valid rows.
+        if self._inflight:
+            newest = self._inflight[-1]
+            if newest.batch == len(rids) and newest.tokens.shape[0] == pad:
+                for i, rid in enumerate(rids):
+                    ch = self._chain.get(rid)
+                    if ch is None or ch[0] is not newest or ch[1] != i:
+                        break
+                else:
+                    return newest.tokens
+        host = np.zeros((pad,), np.int32)
+        use_prev = np.zeros((pad,), bool)
+        prev_rows = np.zeros((pad,), np.int32)
+        prev: Optional[InFlightStep] = None
+        for i, rid in enumerate(rids):
+            ch = self._chain.get(rid)
+            if ch is not None:
+                # every dispatch re-chains its whole batch to the newest
+                # entry, and a rid excluded from a later plan is either at
+                # its output budget (never planned again) or invalidated
+                # (chain cleared) — so all chained rids share one
+                # predecessor even with DEPTH > 1 in flight
+                assert prev is None or prev is ch[0], \
+                    "chained rows span two in-flight steps"
+                prev = ch[0]
+                use_prev[i] = True
+                prev_rows[i] = ch[1]
+            else:
+                host[i] = eng._tokens[rid]
+        if prev is None:
+            return jnp.asarray(host)
+        return _chain_tokens(prev.tokens, jnp.asarray(host),
+                             jnp.asarray(prev_rows), jnp.asarray(use_prev))
+
+    def _dispatch(self, plan: StepPlan):
+        eng = self.eng
+        if eng.decode_mode == "paged":
+            entry = self._dispatch_paged(plan)
+        else:
+            entry = self._dispatch_gather(plan)
+        self._inflight.append(entry)
+        for row, rid in enumerate(plan.rids):
+            self._chain[rid] = (entry, row)
+
+    def _dispatch_paged(self, plan: StepPlan) -> InFlightStep:
+        """The zero-copy decode dispatch, fetch deferred: identical args
+        to the sync ``_decode_paged`` (same jit, same buckets, same
+        sampling stack), minus the ``block_until_ready`` and the
+        ``np.asarray`` — the result stays a device future."""
+        from repro.serving.engine import _pow2_bucket
+        eng = self.eng
+        rids, positions = plan.rids, plan.positions
+        B = len(rids)
+        max_blocks = max(len(eng.pool.manager.tables[rid]) for rid in rids)
+        nb_pad = _pow2_bucket(max_blocks, lo=4)
+        batch_pad = _pow2_bucket(B)
+        view = eng.pool.view(rids, positions, nb_pad, batch_pad)
+        tokens = self._input_tokens(rids, batch_pad)
+        # sampling params are frozen per request: restack (and re-upload)
+        # only when the batch composition changes, not every step
+        skey = (tuple(rids), batch_pad)
+        if self._samp_cache[0] != skey:
+            temp, top_k, top_p, seed = stack_sampling(
+                [r.sampling for r in plan.reqs], pad_to=batch_pad)
+            self._samp_cache = (skey, (jnp.asarray(temp),
+                                       jnp.asarray(top_k),
+                                       jnp.asarray(top_p),
+                                       jnp.asarray(seed)))
+        args = (eng.params, view.pool, view.tables, view.lengths,
+                view.positions, view.slots, tokens,
+                *self._samp_cache[1])
+        obs = eng.obs
+        sc = None
+        if obs is not None:
+            # census BEFORE the call — the pool arg is donated, so the
+            # AOT lowering must see the buffer while it is still alive
+            sc = obs.census.get("decode", eng._paged_jit, args,
+                                bucket=(batch_pad, nb_pad))
+        t_call = time.perf_counter()
+        next_tokens, new_pool = eng._paged_jit(*args)
+        t_ret = time.perf_counter()
+        if obs is not None:
+            tables = eng.pool.manager.tables
+            eng._last_buckets = (
+                batch_pad, nb_pad,
+                sum(min(len(tables[rid]), nb_pad) for rid in rids))
+        eng.pool.commit(new_pool)
+        return InFlightStep(plan, next_tokens, batch=B, sc=sc,
+                            t_call=t_call, t_ret=t_ret)
+
+    def _dispatch_gather(self, plan: StepPlan) -> InFlightStep:
+        """Dense-copy fallback, fetch deferred: gather, decode, KV row
+        scatter, and sampling are all device dispatches (the pool scatter
+        is a ``.at[].set`` pytree map), so the whole step pipelines."""
+        from repro.serving.engine import _bucket
+        eng = self.eng
+        rids, positions = plan.rids, plan.positions
+        max_pos = max(positions)
+        pad_blocks = eng.pool.manager.blocks_needed(
+            _bucket(max_pos + 1, eng.ecfg.block_size * 4))
+        view = eng.pool.gather(rids, pad_blocks)
+        tokens = self._input_tokens(rids, len(rids))
+        pos = jnp.asarray(positions, jnp.int32)
+        args = (eng.params, view, tokens, pos)
+        obs = eng.obs
+        sc = None
+        if obs is not None:
+            sc = obs.census.get("decode_gather", eng._decode_jit, args,
+                                bucket=(len(rids), pad_blocks))
+        t_call = time.perf_counter()
+        logits, new_cache = eng._decode_jit(*args)
+        eng.pool.scatter_new_token(rids, positions, new_cache)
+        next_tokens = eng._steps.sample(
+            logits, *stack_sampling([r.sampling for r in plan.reqs]),
+            positions_array([p + 1 for p in positions]))
+        t_ret = time.perf_counter()
+        if obs is not None:
+            tables = eng.pool.manager.tables
+            eng._last_buckets = (
+                len(rids), pad_blocks,
+                sum(min(len(tables[rid]), pad_blocks) for rid in rids))
+        return InFlightStep(plan, next_tokens, batch=len(rids), sc=sc,
+                            t_call=t_call, t_ret=t_ret)
+
+    # ----------------------------------------------------------- commit --
+    def _commit(self, entry: InFlightStep):
+        """Retire one in-flight step: fetch its tokens (already resident
+        in steady state), run the legacy bookkeeping + finish protocol
+        for every still-valid row, and stamp telemetry with commit-time
+        semantics."""
+        eng = self.eng
+        plan = entry.plan
+        t_fetch_call = time.perf_counter()
+        waited = not _is_ready(entry.tokens)
+        try:
+            host_tokens = np.asarray(entry.tokens)
+        except Exception as err:
+            # deferred device error: the fetch is one iteration behind
+            # the dispatch, so attribute it to the step that produced it
+            err.engine_step = plan.step
+            if hasattr(err, "add_note"):
+                err.add_note(
+                    f"deferred device error from engine step {plan.step} "
+                    f"(dispatched under overlap; surfaced at the next "
+                    f"iteration's commit)")
+            raise
+        t_fetch_ret = time.perf_counter()
+        # best estimate of when the device actually finished this step:
+        # exact when the fetch had to wait; the probe timestamp when a
+        # step-start probe saw it done; else the fetch-call time (a
+        # documented underestimate — it completed some time before we
+        # looked, so gaps read conservatively large, never small)
+        if waited:
+            ready_est = t_fetch_ret
+        elif entry.t_seen_ready is not None:
+            ready_est = entry.t_seen_ready
+        else:
+            ready_est = t_fetch_call
+        # serving-timeline completion stamp, mirroring sync's ``now + dt``
+        t_done = plan.now + (time.perf_counter() - plan.t0)
+        n_valid = 0
+        for i, r in enumerate(plan.reqs):
+            if not entry.valid[i]:
+                continue
+            n_valid += 1
+            rid = r.req_id
+            tok = int(host_tokens[i])
+            eng._tokens[rid] = tok
+            ch = self._chain.get(rid)
+            if ch is not None and ch[0] is entry:
+                del self._chain[rid]
+            r.state.generated += 1
+            r.state.output_tokens.append(tok)
+            # may _finish -> invalidate(rid): the request's speculative
+            # row in the step dispatched moments ago dies here
+            eng._finish_or_run(r, t_done)
+        eng.running = [r for r in eng.running
+                       if r.state.finish_reason is None]
+        t_host_done = time.perf_counter()
+        if n_valid == 0:          # pragma: no cover - dropped eagerly
+            return
+        # telemetry: same series as the sync loop, commit-time semantics
+        # (ITL = inter-commit cadence — what a streaming client observes)
+        dt = (t_host_done - self._t_last_commit
+              if self._t_last_commit is not None
+              else t_host_done - plan.t0)
+        self._t_last_commit = t_host_done
+        eng.itl_samples.append(dt)
+        eng.stall_samples.append(plan.t_sched)
+        eng.prefill_token_samples.append(plan.n_prefill)
+        eng.decode_token_samples.append(n_valid)
+        delta = max(0, eng.preemptions - self._preempt_seen)
+        self._preempt_seen = eng.preemptions
+        eng.preemption_samples.append(delta)
+        eng.batch_samples.append(n_valid)
+        eng.kv_fraction_samples.append(eng.pool.manager.used_fraction)
+        eng.max_kv_fraction = max(eng.max_kv_fraction,
+                                  eng.pool.manager.used_fraction)
+        if eng.obs is not None:
+            prev_ready = self._prev_ready_est
+            # device idle before this step's dispatch (the host gap the
+            # overlap is supposed to close) / how far ahead of the
+            # previous step's completion the dispatch landed (the win)
+            gap_s = (max(0.0, entry.t_call - prev_ready)
+                     if prev_ready is not None else 0.0)
+            ahead_s = (max(0.0, prev_ready - entry.t_ret)
+                       if prev_ready is not None else 0.0)
+            dev0 = (max(entry.t_ret, prev_ready)
+                    if prev_ready is not None else entry.t_ret)
+            device_s = max(ready_est - dev0, 0.0)
+            total_s = (entry.t_call - self._prev_t_call
+                       if self._prev_t_call is not None
+                       else entry.t_call - plan.t0)
+            eng.obs.end_step_overlap(
+                eng, step=plan.step, t0=plan.t0, t_sched_s=plan.t_sched,
+                n_prefill=plan.n_prefill, n_decode=n_valid, sc=entry.sc,
+                batch=entry.batch, t_call=entry.t_call, t_ret=entry.t_ret,
+                dev0=dev0, dev1=max(ready_est, dev0), gap_s=gap_s,
+                dispatch_ahead_s=ahead_s, total_s=max(total_s, 0.0),
+                host_s=t_host_done - t_fetch_ret)
+        self._prev_ready_est = ready_est
+        self._prev_t_call = entry.t_call

@@ -51,11 +51,24 @@ from repro.serving.workload import FINISH_DEADLINE
 
 @dataclasses.dataclass(frozen=True)
 class StepPhases:
-    """One engine step's time, attributed to its four phases (seconds).
+    """One engine step's time, attributed to its phases (seconds).
 
-    ``schedule + dispatch + device + host == total`` up to clock
-    granularity; on a decode-less (prefill-only) step dispatch and device
-    are zero and the prefill work sits inside schedule.
+    Synchronous steps (``overlapped=False``): ``schedule + dispatch +
+    device + host == total`` up to clock granularity; on a decode-less
+    (prefill-only) step dispatch and device are zero and the prefill work
+    sits inside schedule.
+
+    Overlapped steps (``overlapped=True``, executor commit path): host
+    work runs concurrently with device execution, so the phases are
+    *attributions*, not a partition of ``total_s``. ``total_s`` is the
+    dispatch-call cadence (step N's dispatch to step N+1's dispatch — the
+    device-facing step period); ``device_s`` is the estimated span the
+    device spent exclusively on this step; ``gap_s`` is the device idle
+    time between the previous step's completion and this step's dispatch
+    (the host-induced bubble overlap exists to close — the term
+    ``host_gap_fraction`` sums for overlapped steps); ``dispatch_ahead_s``
+    is how far *before* the previous step completed this one was already
+    dispatched (the overlap win, 0 in sync mode by construction).
     """
     step: int
     schedule_s: float
@@ -63,6 +76,13 @@ class StepPhases:
     device_s: float
     host_s: float
     total_s: float
+    overlapped: bool = False
+    dispatch_ahead_s: float = 0.0
+    gap_s: float = 0.0
+    # prefill tokens admitted in the same iteration: 0 marks a pure
+    # decode steady-state step (prefill work sits inside schedule_s, so
+    # steady-state analyses filter on it)
+    n_prefill: int = 0
 
 
 class EngineObserver:
@@ -221,7 +241,7 @@ class EngineObserver:
         self.phases.append(StepPhases(
             step=eng.step_count, schedule_s=t_sched_s,
             dispatch_s=dispatch_s, device_s=device_s, host_s=host_s,
-            total_s=total_s))
+            total_s=total_s, n_prefill=n_prefill))
         self.trace.span("schedule", t0 - e, t0 - e + t_sched_s,
                         pid=self.pid, cat="phase")
         self.trace.span(f"step {eng.step_count}", t0 - e, t_end - e,
@@ -260,25 +280,109 @@ class EngineObserver:
                 w.push(STREAM_WASTE_RESERVED, t_now,
                        wb.reserved_unused_bytes)
 
+    # ----------------------------------------------- end step (overlap) --
+    def end_step_overlap(self, eng, *, step: int, t0: float,
+                         t_sched_s: float, n_prefill: int, n_decode: int,
+                         sc: Optional[StepCensus], batch: int,
+                         t_call: float, t_ret: float, dev0: float,
+                         dev1: float, gap_s: float,
+                         dispatch_ahead_s: float, total_s: float,
+                         host_s: float):
+        """Close one *overlapped* engine step, called by the executor at
+        commit time (one iteration after the dispatch it describes).
+
+        ``t_call``/``t_ret`` bound the dispatch call; ``dev0``/``dev1``
+        bound the estimated exclusive device span (event-estimate based —
+        see ``Executor._commit``); ``total_s`` is the dispatch cadence.
+        A fully invalidated speculative step commits nothing and emits no
+        sample at all (its device time was wasted speculation, already
+        visible as a preemption/abort event on the lifecycle track)."""
+        e = self.trace.epoch
+        device_s = max(dev1 - dev0, 0.0)
+        self.roofline.record(step=step, sc=sc, device_s=device_s,
+                             batch=batch, variant="decode")
+        self.trace.span("schedule", t0 - e, t0 - e + t_sched_s,
+                        pid=self.pid, cat="phase")
+        self.trace.span("dispatch", t_call - e, t_ret - e, pid=self.pid,
+                        cat="phase")
+        if device_s > 0:
+            self.trace.span("device", dev0 - e, dev1 - e, pid=self.pid,
+                            cat="phase")
+        if gap_s > 0:
+            # device idle between the previous step's completion and this
+            # dispatch — the bubble the overlap is meant to close
+            self.trace.span("gap", t_call - gap_s - e, t_call - e,
+                            pid=self.pid, cat="phase")
+        self.phases.append(StepPhases(
+            step=step, schedule_s=t_sched_s, dispatch_s=t_ret - t_call,
+            device_s=device_s, host_s=host_s, total_s=total_s,
+            overlapped=True, dispatch_ahead_s=dispatch_ahead_s,
+            gap_s=gap_s, n_prefill=n_prefill))
+        t_end = time.perf_counter()
+        self.trace.span(f"step {step}", t0 - e, t_end - e, pid=self.pid,
+                        cat="step",
+                        args={"step": step, "decode": n_decode,
+                              "prefill_tokens": n_prefill,
+                              "overlapped": True,
+                              "dispatch_ahead_us": dispatch_ahead_s * 1e6,
+                              "gap_us": gap_s * 1e6})
+        t_now = t_end - e
+        self.trace.counter("kv_used_fraction", t_now,
+                           {"used": eng.pool.manager.used_fraction},
+                           pid=self.pid)
+        self.trace.counter("batch", t_now,
+                           {"decoding": n_decode,
+                            "prefilling": len(eng.prefilling),
+                            "waiting": len(eng.waiting)},
+                           pid=self.pid)
+        wb = None
+        if self.auditor is not None:
+            wb = self.auditor.on_step(eng, n_decode=n_decode)
+            self.trace.counter("kv_waste_bytes", t_now,
+                               {"used": wb.used_bytes,
+                                "block_pad": wb.block_pad_bytes,
+                                "prefix_held": wb.prefix_held_bytes,
+                                "free": wb.free_bytes,
+                                "reserved_unused": wb.reserved_unused_bytes},
+                               pid=self.pid)
+        w = self.parent.windows
+        if w is not None:
+            if n_decode:
+                w.push(STREAM_ITL, t_now, total_s)
+            w.push(STREAM_KV, t_now, eng.pool.manager.used_fraction)
+            w.push(STREAM_BATCH, t_now, n_decode)
+            w.push(STREAM_TOKENS, t_now, n_decode + n_prefill)
+            if wb is not None:
+                w.push(STREAM_WASTE_USED, t_now, wb.used_bytes)
+                w.push(STREAM_WASTE_RESERVED, t_now,
+                       wb.reserved_unused_bytes)
+
     # ----------------------------------------------------------- views --
     def phase_summary(self) -> dict:
         """Mean seconds per phase over retained steps + the host-gap
-        fraction (host + dispatch over total — the paper's host
-        bottleneck indicator, live)."""
+        fraction — the paper's host-bottleneck indicator, live. For
+        synchronous steps the numerator is host + dispatch time (device
+        provably idle while they run); for overlapped steps it is the
+        measured device-idle ``gap_s`` (host work that fits under device
+        execution no longer counts — that's the point of the overlap)."""
         n = len(self.phases)
         if n == 0:
             return {"steps": 0, "schedule_s": 0.0, "dispatch_s": 0.0,
                     "device_s": 0.0, "host_s": 0.0, "total_s": 0.0,
+                    "dispatch_ahead_s": 0.0, "gap_s": 0.0,
                     "host_gap_fraction": 0.0}
         tot = sum(p.total_s for p in self.phases)
         mean = lambda f: sum(f(p) for p in self.phases) / n  # noqa: E731
-        host = sum(p.host_s + p.dispatch_s for p in self.phases)
+        host = sum(p.gap_s if p.overlapped else p.host_s + p.dispatch_s
+                   for p in self.phases)
         return {"steps": self.phases.appended,
                 "schedule_s": mean(lambda p: p.schedule_s),
                 "dispatch_s": mean(lambda p: p.dispatch_s),
                 "device_s": mean(lambda p: p.device_s),
                 "host_s": mean(lambda p: p.host_s),
                 "total_s": mean(lambda p: p.total_s),
+                "dispatch_ahead_s": mean(lambda p: p.dispatch_ahead_s),
+                "gap_s": mean(lambda p: p.gap_s),
                 "host_gap_fraction": host / max(tot, 1e-12)}
 
     def summary(self) -> dict:

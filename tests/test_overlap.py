@@ -1,0 +1,349 @@
+"""Scheduler/executor split with double-buffered overlapped steps:
+``EngineConfig.overlap=True`` must be **bit-identical** to the
+synchronous loop (tokens, finish reasons, per-request metrics) across
+greedy and sampled decode, chunked prefill, the prefix cache,
+pool-pressure preemption, a 2-replica cluster, and a kill-1-of-2 fault
+redrive — while mid-overlap abort/deadline expiry must reclaim the KV of
+an already-dispatched step without corrupting survivors. Also pins the
+cluster's event-driven wakeups (an idle threaded cluster burns no engine
+steps) and the asyncio facade's equivalence to the sync facade."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model, init_params
+from repro.serving import (AsyncServingAPI, ContinuousBatchingEngine,
+                           EngineConfig, FaultInjector, FaultSpec,
+                           ReplicatedCluster, Request, SamplingParams,
+                           ServingAPI, StepFunctions, sharegpt_like,
+                           shared_prefix_workload)
+from repro.serving.workload import (FINISH_ABORT, FINISH_DEADLINE,
+                                    FINISH_LENGTH, FINISH_STOP)
+
+SERVED = (FINISH_LENGTH, FINISH_STOP)
+SAMPLED = SamplingParams(temperature=0.9, top_k=40, seed=11)
+
+
+@pytest.fixture(scope="module")
+def setup(rules):
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    steps = StepFunctions.build(model, 8)
+    return cfg, params, model, steps
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=4, block_size=8, kv_pool_tokens=4096,
+                max_model_len=128, prefill_bucket=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _engine(setup, **kw):
+    _, params, model, steps = setup
+    return ContinuousBatchingEngine(model, params, _ecfg(**kw), steps=steps)
+
+
+def _wl(cfg, n=5, seed=2, mean_out=8, **kw):
+    return sharegpt_like(n, cfg.vocab_size, seed=seed, mean_in=12,
+                         mean_out=mean_out, max_len=64, sigma=0.4, **kw)
+
+
+def _request_metrics(reqs):
+    """The per-request record bit-identity is judged on: exact output
+    tokens, finish reason, token count, and TTFT presence. (Wall-clock
+    values legitimately differ between the two loops.)"""
+    return [(list(map(int, r.output_tokens)), r.finish_reason,
+             len(r.output_tokens), r.t_first_token is not None)
+            for r in reqs]
+
+
+def _run_both(setup, wl_fn, **ecfg_kw):
+    """Run the same workload through the sync and overlapped loops on
+    fresh engines; returns (sync_metrics, overlap_metrics, engines)."""
+    out, engines = {}, {}
+    for overlap in (False, True):
+        eng = _engine(setup, overlap=overlap, **ecfg_kw)
+        reqs = wl_fn()
+        eng.run(reqs)
+        assert all(r.t_done is not None for r in reqs)
+        out[overlap] = _request_metrics(reqs)
+        engines[overlap] = eng
+    return out[False], out[True], engines
+
+
+# --------------------------------------------------------- bit identity --
+def test_overlap_bit_identical_greedy(setup):
+    cfg = setup[0]
+    sync, over, engines = _run_both(setup, lambda: _wl(cfg))
+    assert over == sync
+    # the overlapped engine actually overlapped: it ran through the
+    # executor and left no in-flight residue behind
+    assert engines[True].ecfg.overlap
+    assert not engines[True]._executor._inflight
+    assert not engines[True]._executor._chain
+
+
+def test_overlap_bit_identical_sampled(setup):
+    cfg = setup[0]
+    sync, over, _ = _run_both(
+        setup, lambda: _wl(cfg, seed=7, sampling=SAMPLED))
+    assert any(m[1] in SERVED for m in sync)
+    assert over == sync
+
+
+def test_overlap_bit_identical_chunked_prefill(setup):
+    cfg = setup[0]
+    sync, over, engines = _run_both(
+        setup, lambda: _wl(cfg, seed=4, mean_out=6),
+        prefill_chunk_tokens=16)
+    assert engines[True].chunking
+    assert over == sync
+
+
+def test_overlap_bit_identical_prefix_cache(setup):
+    cfg = setup[0]
+    wl = lambda: shared_prefix_workload(          # noqa: E731
+        2, 3, cfg.vocab_size, prefix_len=24, suffix_len=8,
+        max_new_tokens=6, seed=3)
+    sync, over, engines = _run_both(setup, wl, prefix_cache=True)
+    assert engines[True].prefix is not None
+    assert over == sync
+
+
+def test_overlap_bit_identical_across_preemption(setup):
+    """Starved pool: recompute-style preemption must replay the same
+    tokens under overlap, even though the overlapped loop commits (and
+    therefore frees finished requests' KV) one plan later."""
+    cfg = setup[0]
+    wl = lambda: sharegpt_like(6, cfg.vocab_size, seed=11,  # noqa: E731
+                               mean_in=20, mean_out=36, max_len=60,
+                               sigma=0.1, sampling=SAMPLED)
+    sync, over, engines = _run_both(setup, wl, max_batch=6,
+                                    kv_pool_tokens=256, max_model_len=96)
+    assert engines[True].preemptions > 0, \
+        "workload was meant to force preemption under overlap"
+    assert over == sync
+
+
+# ---------------------------------------- mid-overlap abort / deadline --
+def test_mid_overlap_abort_reclaims_dispatched_step(setup):
+    """Abort a request while the executor holds a dispatched-not-yet-
+    committed step for it: the speculative token must be discarded, its
+    KV reclaimed, and every surviving request must stay bit-identical
+    to the synchronous loop."""
+    cfg = setup[0]
+    baseline = _wl(cfg, mean_out=16)
+    _engine(setup).run(baseline)
+
+    eng = _engine(setup, overlap=True)
+    reqs = _wl(cfg, mean_out=16)
+    for r in reqs:
+        eng.add_request(r)
+    victim = reqs[0]
+    aborted = False
+    now = 0.0
+    while eng.busy:
+        eng.step(now)
+        now += 1e-3
+        if not aborted and len(victim.state.output_tokens) >= 3:
+            # the executor has already dispatched the *next* token for
+            # the victim at this point (double-buffered: one in flight)
+            assert eng._executor._inflight, \
+                "expected an in-flight step at abort time"
+            assert eng.abort(victim.req_id, now)
+            aborted = True
+            n_at_abort = len(victim.state.output_tokens)
+    assert aborted
+    assert victim.finish_reason == FINISH_ABORT
+    # no speculative token from the invalidated in-flight step landed
+    assert len(victim.state.output_tokens) == n_at_abort
+    assert list(victim.state.output_tokens) == \
+        list(baseline[0].output_tokens)[:n_at_abort]
+    # KV fully reclaimed once the engine drains
+    assert eng.pool.manager.used_fraction == 0.0
+    assert not eng._executor._inflight and not eng._executor._chain
+    # survivors unaffected
+    assert _request_metrics(reqs[1:]) == _request_metrics(baseline[1:])
+
+
+def test_mid_overlap_deadline_expiry_reclaims_kv(setup):
+    """A deadline that expires mid-decode must finish the request
+    ``"deadline"`` under overlap, discard its dispatched step, and
+    leave survivors bit-identical to the synchronous loop."""
+    cfg = setup[0]
+    mk = lambda: _wl(cfg, mean_out=16)            # noqa: E731
+
+    def with_deadline(reqs):
+        import dataclasses
+        return [Request(req_id=r.req_id, prompt=r.prompt,
+                        arrival_s=r.arrival_s,
+                        max_new_tokens=r.max_new_tokens,
+                        sampling=dataclasses.replace(
+                            r.sampling, deadline_s=0.004)
+                        if r.req_id == 0 else r.sampling)
+                for r in reqs]
+
+    outs = {}
+    for overlap in (False, True):
+        eng = _engine(setup, overlap=overlap)
+        reqs = with_deadline(mk())
+        for r in reqs:
+            eng.add_request(r)
+        # deterministic simulated clock: one millisecond per step, so
+        # the deadline trips at the same plan number in both modes
+        now = 0.0
+        while eng.busy:
+            eng.step(now)
+            now += 1e-3
+        assert reqs[0].finish_reason == FINISH_DEADLINE
+        assert all(r.finish_reason in SERVED for r in reqs[1:])
+        assert eng.pool.manager.used_fraction == 0.0
+        outs[overlap] = _request_metrics(reqs[1:])
+    assert outs[True] == outs[False]
+
+
+# ----------------------------------------------------------- cluster --
+def test_overlap_cluster_bit_identical(setup):
+    cfg = setup[0]
+    outs = {}
+    for overlap in (False, True):
+        engines = [_engine(setup, overlap=overlap) for _ in range(2)]
+        cluster = ReplicatedCluster(engines, mode="sync")
+        reqs = _wl(cfg, n=6, seed=9, mean_out=10)
+        m = cluster.run(reqs)
+        assert m.completed == 6
+        outs[overlap] = _request_metrics(reqs)
+    assert outs[True] == outs[False]
+
+
+def test_overlap_kill_one_of_two_redrive_bit_identical(setup):
+    """Replica death mid-overlap: quarantine drops the dead replica's
+    in-flight dispatched step (Executor.reset) and the redrive
+    regenerates the exact fault-free tokens on the survivor."""
+    cfg = setup[0]
+    baseline = _wl(cfg, n=6, seed=9, mean_out=10)
+    ReplicatedCluster([_engine(setup, overlap=True),
+                       _engine(setup, overlap=True)],
+                      mode="sync").run(baseline)
+    assert all(r.finish_reason in SERVED for r in baseline)
+
+    inj = FaultInjector([FaultSpec("kill", replica=1, step=4)])
+    cluster = ReplicatedCluster([_engine(setup, overlap=True),
+                                 _engine(setup, overlap=True)],
+                                mode="sync", faults=inj)
+    reqs = _wl(cfg, n=6, seed=9, mean_out=10)
+    m = cluster.run(reqs)
+    assert len(inj.fired) == 1
+    assert m.faults == 1 and m.redriven > 0 and m.lost == 0
+    assert m.completed == 6
+    dead = cluster.replicas[1].engine
+    assert not dead._executor._inflight and not dead._executor._chain
+    assert _request_metrics(reqs) == _request_metrics(baseline)
+
+
+def test_idle_cluster_burns_no_steps(setup):
+    """Event-driven wakeups: with every arrival still in the future, the
+    threaded replica loops must park on the work condition variable —
+    ``step_count`` measures work, not polling."""
+    cfg = setup[0]
+    cluster = ReplicatedCluster([_engine(setup), _engine(setup)],
+                                mode="thread")
+    base = _wl(cfg, n=4, seed=5)
+    reqs = [Request(req_id=r.req_id, prompt=r.prompt, arrival_s=0.4,
+                    sampling=r.sampling,
+                    max_new_tokens=r.max_new_tokens) for r in base]
+    samples = []
+
+    def watcher():
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < 0.3:
+            samples.append(sum(rep.engine.step_count
+                               for rep in cluster.replicas))
+            time.sleep(0.02)
+
+    w = threading.Thread(target=watcher)
+    w.start()
+    m = cluster.run(reqs)
+    w.join()
+    assert samples and max(samples) == 0, \
+        f"idle cluster burned steps: {samples}"
+    assert m.completed == len(reqs)
+
+
+# ------------------------------------------------------- async facade --
+def test_async_api_matches_sync_facade(setup):
+    """AsyncServingAPI (pump thread + per-handle queues) must emit the
+    same tokens as the cooperative sync facade — here on top of an
+    *overlapped* engine, so the whole stack composes."""
+    import asyncio
+
+    cfg = setup[0]
+    prompts = [list(map(int, np.asarray(r.prompt)))
+               for r in _wl(cfg, n=4, seed=3)]
+
+    sync_api = ServingAPI(_engine(setup, overlap=True))
+    for p in prompts:
+        sync_api.submit(p)
+    sync_outs = sync_api.drain()
+
+    async def main():
+        api = AsyncServingAPI(_engine(setup, overlap=True))
+        handles = [await api.submit(p) for p in prompts]
+
+        async def consume(h):
+            toks = []
+            async for ev in api.stream(h):
+                toks.extend(ev.new_token_ids)
+                if ev.finished:
+                    return toks, ev.finish_reason
+            return toks, None
+
+        streamed = await asyncio.gather(*(consume(h) for h in handles))
+        outs = await api.drain()
+        await api.aclose()
+        return streamed, outs
+
+    streamed, outs = asyncio.run(main())
+    assert set(outs) == set(sync_outs)
+    for rid in outs:
+        assert outs[rid].token_ids == sync_outs[rid].token_ids
+        assert outs[rid].finish_reason == sync_outs[rid].finish_reason
+    # streamed deltas reassemble to the same cumulative outputs
+    for (toks, reason), h_rid in zip(streamed, sorted(outs)):
+        assert tuple(toks) == outs[h_rid].token_ids
+        assert reason == outs[h_rid].finish_reason
+
+
+def test_async_api_abort_terminates_stream(setup):
+    import asyncio
+
+    cfg = setup[0]
+    prompts = [list(map(int, np.asarray(r.prompt)))
+               for r in _wl(cfg, n=2, seed=3, mean_out=16)]
+
+    async def main():
+        async with AsyncServingAPI(_engine(setup, overlap=True)) as api:
+            h0 = await api.submit(prompts[0])
+            h1 = await api.submit(prompts[1])
+            # let a few tokens land, then abort the first stream
+            seen = []
+            async for ev in api.stream(h0):
+                seen.extend(ev.new_token_ids)
+                if ev.finished:
+                    return seen, ev.finish_reason, None
+                if len(seen) >= 2:
+                    await api.abort(h0)
+            # stream already ended via finished event inside the loop
+            outs = await api.drain()
+            return seen, outs[h0.req_id].finish_reason, \
+                outs[h1.req_id].finish_reason
+
+    seen, reason0, reason1 = asyncio.run(main())
+    assert reason0 == FINISH_ABORT
+    assert reason1 in SERVED or reason1 is None
