@@ -7,6 +7,6 @@ from repro.core.roofline import RooflineReport, roofline_report, model_flops_for
 from repro.core.perfmodel import (HostOverhead, decode_step_terms,  # noqa
                                   prefill_step_terms, decode_curves,
                                   max_batch_for, ServingCurves)
-from repro.core.bca import BatchingConfigurationAdvisor, BCAResult, chunk_budget_for, slo_from_reference, knee_point, with_prefix_reuse  # noqa
+from repro.core.bca import BatchingConfigurationAdvisor, BCAResult, chunk_budget_for, slo_from_reference, knee_point, with_prefix_reuse, SpecPlan, speculation_advisor  # noqa
 from repro.core.replication import ReplicationPlanner, ReplicationPlan, slice_mesh  # noqa
 from repro.core.simulator import simulate_decode, replication_sweep, SimResult  # noqa

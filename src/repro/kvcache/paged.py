@@ -224,6 +224,29 @@ class BlockManager:
         self.version += 1
         return old, new
 
+    def truncate(self, req_id: int, keep_blocks: int) -> List[int]:
+        """Drop ``req_id``'s table blocks beyond the first ``keep_blocks``.
+
+        The token-granular rollback primitive (speculative decoding
+        releases rejected-token KV through it): tail blocks leave the
+        table and drop one reference each — a block returns to the free
+        list only when no other owner (another request's table or the
+        prefix index) still holds it, so prefix-shared blocks are never
+        reclaimed out from under their co-owners. Returns the dropped
+        physical ids (possibly still live via other references).
+        """
+        if keep_blocks < 0:
+            raise ValueError(f"keep_blocks must be >= 0, got {keep_blocks}")
+        table = self.tables.get(req_id)
+        if table is None or keep_blocks >= len(table):
+            return []
+        dropped = table[keep_blocks:]
+        del table[keep_blocks:]
+        for b in dropped:
+            self.decref(b)
+        self.version += 1
+        return dropped
+
     def release(self, req_id: int):
         table = self.tables.pop(req_id, [])
         for b in table:
@@ -627,8 +650,8 @@ class PagedKVCache:
                     slots[i] = self._slot(rid)
                 self._tables_np = table
                 self._tables_snap = snap
-                self._dev_tables = jnp.asarray(table)
-                self._dev_slots = jnp.asarray(slots)
+                self._dev_tables, self._dev_slots = \
+                    jax.device_put((table, slots))
             self._dev_tables_key = key
         pt = tuple(positions)
         cached = self._poslen
@@ -640,8 +663,7 @@ class PagedKVCache:
             pos[:B] = np.asarray(positions, np.int32)
             lens = np.zeros((batch_pad,), np.int32)
             lens[:B] = pos[:B] + 1
-            dev_pos = jnp.asarray(pos)
-            dev_lens = jnp.asarray(lens)
+            dev_pos, dev_lens = jax.device_put((pos, lens))
         self._poslen = (ckey, pt, dev_pos, dev_lens)
         return PagedCacheView(self.pool, self._dev_tables,
                               dev_lens, dev_pos,
@@ -656,6 +678,23 @@ class PagedKVCache:
         if rid not in self._slots:
             self._slots[rid] = self._free_slots.pop()
         return self._slots[rid]
+
+    def rollback(self, rid: int, n_tokens: int) -> List[int]:
+        """Shrink ``rid``'s KV to its first ``n_tokens`` tokens.
+
+        Token-granular: the table is truncated to exactly the blocks
+        those tokens need; whole blocks past the boundary are released
+        (ref-counted — a prefix-shared block survives in its other
+        owners' tables and in the prefix index, untouched). Bytes inside
+        the kept tail block past ``n_tokens`` are *not* zeroed: the
+        attention mask (``lengths``) already hides them, and the next
+        write at those positions lands on the same (block, slot)
+        addresses. Returns the dropped physical block ids.
+        """
+        if n_tokens < 0:
+            raise ValueError(f"n_tokens must be >= 0, got {n_tokens}")
+        return self.manager.truncate(rid,
+                                     self.manager.blocks_needed(n_tokens))
 
     def release(self, rid: int):
         self.manager.release(rid)

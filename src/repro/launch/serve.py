@@ -48,6 +48,13 @@ def main():
                     help="share KV blocks across prompts with a common "
                          "prefix (radix prefix cache; skips redundant "
                          "prefill and pool footprint)")
+    ap.add_argument("--workload", default="sharegpt",
+                    choices=("sharegpt", "repetitive"),
+                    help="request mix: 'sharegpt' = independent "
+                         "ShareGPT-like prompts; 'repetitive' = highly "
+                         "self-repetitive template prompts (the "
+                         "speculative-decoding target shape — pair with "
+                         "--speculate)")
     ap.add_argument("--shared-prefix-tenants", type=int, default=0,
                     metavar="N",
                     help="serve a shared-system-prompt workload (N "
@@ -56,6 +63,17 @@ def main():
                          "independent ShareGPT-like prompts — the shape "
                          "where --prefix-cache and the prefix-affinity "
                          "policy actually pay off")
+    ap.add_argument("--speculate", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="speculative decoding: draft-free prompt-lookup "
+                         "drafter + multi-token verify over the paged pool "
+                         "(outputs bit-identical to plain decode). Default "
+                         "lets the BCA speculation advisor decide from the "
+                         "break-even batch; --no-speculate forces it off")
+    ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                    help="max draft tokens per request per verify step "
+                         "(0 = advisor's K, or the engine default when "
+                         "--speculate was forced on)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax, "
                          "bit-identical to the pre-sampler engine)")
@@ -183,6 +201,19 @@ def main():
         n_rep = int(args.replicas)
     n_rep = max(1, min(n_rep, 8))       # CPU-container sanity cap
 
+    # speculative decoding: default is advisor-decided — speculate iff the
+    # break-even math says the verify compute rides the memory gap at this
+    # batch (small B), forced on/off by --speculate/--no-speculate
+    speculate, spec_k = args.speculate, args.spec_k
+    if speculate is None or (speculate and spec_k <= 0):
+        from repro.core import speculation_advisor
+        sp = speculation_advisor(full_cfg, hw, batch=max(max_batch, 1))
+        print(f"[spec] advisor: {sp.summary()}")
+        if speculate is None:
+            speculate = sp.enabled
+        if spec_k <= 0:
+            spec_k = sp.k            # 0 = keep the engine default
+
     # real engine run (reduced config on CPU)
     cfg = reduced(full_cfg) if args.reduced else full_cfg
     mesh = make_test_mesh()
@@ -199,7 +230,9 @@ def main():
                             overlap=args.overlap,
                             prefill_chunk_tokens=prefill_chunk,
                             max_waiting=args.max_waiting or None,
-                            shed_kv_fraction=args.shed_kv or None)
+                            shed_kv_fraction=args.shed_kv or None,
+                            speculate=bool(speculate),
+                            **({"spec_k": spec_k} if spec_k > 0 else {}))
         sampling = SamplingParams(temperature=args.temperature,
                                   top_k=args.top_k, top_p=args.top_p,
                                   seed=args.seed,
@@ -221,6 +254,12 @@ def main():
                 args.shared_prefix_tenants, per, cfg.vocab_size,
                 prefix_len=128, suffix_len=24, max_new_tokens=16,
                 seed=0, sampling=sampling)[:args.requests]
+        elif args.workload == "repetitive":
+            from repro.serving import repetitive_workload
+            reqs = repetitive_workload(
+                args.requests, cfg.vocab_size, prompt_len=64,
+                max_new_tokens=32, repeat_rate=1.0, phrase_len=8,
+                pool_size=1, seed=0, sampling=sampling)
         else:
             reqs = sharegpt_like(args.requests, cfg.vocab_size, seed=0,
                                  mean_in=24, mean_out=32, max_len=256,
@@ -367,6 +406,12 @@ def main():
     print(f"[engine] {metrics.latency_row()}")
     print(f"[engine] {metrics.stall_row()}")
     print(f"[engine] {metrics.finish_row()}")
+    if speculate:
+        why = getattr(backend, "spec_disabled_reason", None)
+        if why is not None:
+            print(f"[spec] disabled: {why}")
+        else:
+            print(f"[spec] {metrics.spec_row()}")
 
 
 if __name__ == "__main__":

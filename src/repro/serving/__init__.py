@@ -5,6 +5,7 @@ from repro.serving.workload import (FINISH_ABORT, FINISH_DEADLINE,  # noqa
                                     FINISH_REASONS, FINISH_SHED, FINISH_STOP,
                                     Request, RequestState, SamplingParams,
                                     arrival_times, long_short_workload,
+                                    repetitive_workload,
                                     shared_prefix_workload, sharegpt_like)
 from repro.serving.faults import (FAULT_KINDS, FaultInjector, FaultSpec,  # noqa
                                   InjectedFault, parse_fault)
@@ -13,6 +14,7 @@ from repro.serving.metrics import (Percentiles, ServingMetrics,  # noqa
 from repro.serving.cluster import (ClusterMetrics, ReplicatedCluster,  # noqa
                                    autoscale)
 from repro.serving.scheduler import Scheduler, StepPlan  # noqa
+from repro.serving.spec import Drafter, PromptLookupDrafter  # noqa
 from repro.serving.executor import Executor  # noqa
 from repro.serving.api import (AsyncRequestHandle, AsyncServingAPI,  # noqa
                                GenerationOutput, RequestHandle,

@@ -83,6 +83,12 @@ class ClusterMetrics:
     watchdog_trips: int = 0      # wedged-replica detections
     # mean per-replica availability (1.0 = no replica ever failed)
     availability: float = 1.0
+    # --- speculative decoding (summed across replicas; all zero when
+    # no replica ran with EngineConfig.speculate) ---
+    spec_steps: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+    spec_rejected: int = 0
 
     @property
     def throughput(self) -> float:
@@ -101,6 +107,11 @@ class ClusterMetrics:
     @property
     def preemptions(self) -> int:
         return sum(r.preemptions for r in self.per_replica)
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Pooled accepted fraction of all drafted tokens cluster-wide."""
+        return self.spec_accepted / max(self.spec_drafted, 1)
 
     def row(self) -> str:
         return (f"R={self.n_replicas} [{self.policy}/{self.mode}] "
@@ -128,6 +139,12 @@ class ClusterMetrics:
             lines.append("  finish: " + " ".join(
                 f"{k}={self.finish_reasons.get(k, 0)}"
                 for k in FINISH_REASONS))
+        if self.spec_steps:
+            lines.append(
+                f"  spec: steps={self.spec_steps} "
+                f"drafted={self.spec_drafted} "
+                f"accepted={self.spec_accepted} "
+                f"({self.spec_acceptance_rate*100:.0f}%)")
         if self.faults or self.shed or self.deadline_expired \
                 or self.watchdog_trips:
             lines.append(
@@ -191,4 +208,8 @@ def aggregate(per_replica: List[ReplicaStats], *, wall_s: float, policy: str,
         queued_aborts=sum(r.metrics.queued_aborts for r in per_replica),
         watchdog_trips=watchdog_trips,
         availability=(float(np.mean([r.availability for r in per_replica]))
-                      if per_replica else 1.0))
+                      if per_replica else 1.0),
+        spec_steps=sum(r.metrics.spec_steps for r in per_replica),
+        spec_drafted=sum(r.metrics.spec_drafted for r in per_replica),
+        spec_accepted=sum(r.metrics.spec_accepted for r in per_replica),
+        spec_rejected=sum(r.metrics.spec_rejected for r in per_replica))

@@ -107,6 +107,10 @@ from repro.serving.executor import Executor
 from repro.serving.faults import FaultInjector
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import Scheduler, StepPlan
+from repro.serving.spec import (PromptLookupDrafter, spec_verify_fn,
+                                stack_drafts)
+from repro.serving.spec.drafter import Drafter
+from repro.serving.spec.verify import accepted_prefix
 from repro.serving.obs.series import DEFAULT_SERIES_MAXLEN, BoundedSeries
 from repro.serving.workload import (FINISH_ABORT, FINISH_DEADLINE,
                                     FINISH_FAILED, FINISH_LENGTH,
@@ -175,6 +179,22 @@ class EngineConfig:
     # already blows is shed as "deadline_unmeetable" even without a
     # global bound
     shed_queue_delay_s: Optional[float] = None
+    # --- speculative decoding (draft-free prompt-lookup; off by default) ---
+    # verify up to spec_k drafted tokens per request per step through the
+    # fused multi-token verify jit; accepted outputs stay bit-identical
+    # to serial decode. Requires the paged decode path and per-token-
+    # addressable KV (same gate as the prefix cache) — unsupported
+    # configs silently fall back with the reason in spec_disabled_reason.
+    speculate: bool = False
+    spec_k: int = 8                     # max draft tokens per step
+    spec_ngram: int = 3                 # longest prompt-lookup n-gram
+    # overlap mode only: rows with a plain step in flight are device-
+    # chained (their committed history is host-unknown, so the drafter
+    # cannot run). Every spec_probe_every-th iteration with chained rows
+    # the scheduler drains the pipeline so the drafter gets a shot at
+    # fully committed context; once speculation engages, verify steps
+    # keep rows unchained and the probes stop costing anything.
+    spec_probe_every: int = 8
     # bound on every per-step telemetry series (ITL, KV occupancy, stall,
     # token splits, preemptions, observability phase/roofline samples):
     # a series reaching this length decimates itself (uniform 1-in-N
@@ -236,6 +256,15 @@ class EngineConfig:
             raise ValueError(
                 f"shed_queue_delay_s must be > 0 (or None to disable), "
                 f"got {self.shed_queue_delay_s}")
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if self.spec_ngram < 1:
+            raise ValueError(
+                f"spec_ngram must be >= 1, got {self.spec_ngram}")
+        if self.spec_probe_every < 1:
+            raise ValueError(
+                f"spec_probe_every must be >= 1, got "
+                f"{self.spec_probe_every}")
         if self.series_maxlen < 2:
             raise ValueError(
                 f"series_maxlen must be >= 2, got {self.series_maxlen}")
@@ -262,6 +291,10 @@ class StepFunctions:
     # vectorized sampler for the host-logits paths (prefill first token,
     # gather decode); the zero-copy paged step fuses it in-jit instead
     sample: Callable
+    # multi-token speculative verify (serving.spec): K+1 chained serial
+    # decode iterations + in-jit acceptance in one program; recompiles
+    # per (batch_pad, nb_pad, K_pad) bucket like the paged step
+    spec_verify: Callable
 
     @classmethod
     def build(cls, model: Model, block_size: int) -> "StepFunctions":
@@ -285,7 +318,9 @@ class StepFunctions:
                 partial(_chunk_prefill_fn, model, block_size, layout),
                 static_argnames=("cache_len", "nb_prefix"),
                 donate_argnums=donate),
-            sample=jax.jit(sample_tokens))
+            sample=jax.jit(sample_tokens),
+            spec_verify=jax.jit(partial(spec_verify_fn, model, block_size),
+                                donate_argnums=donate))
 
 
 def _bucket(n: int, b: int) -> int:
@@ -350,6 +385,30 @@ class ContinuousBatchingEngine:
         self._paged_jit = self._steps.paged
         self._prefix_prefill_jit = self._steps.prefix_prefill
         self._chunk_prefill_jit = self._steps.chunk_prefill
+        self._spec_verify_jit = self._steps.spec_verify
+        # device-staged sampling stacks keyed on batch composition: the
+        # verify step re-dispatches every step but its sampling params
+        # are frozen per request, so re-uploading them is pure per-step
+        # host overhead (4 device_puts) the small-batch regime can't hide
+        self._spec_samp_cache: Dict[tuple, tuple] = {}
+        # speculative decoding (serving.spec): the drafter proposes
+        # per-request token spans the scheduler turns into draft-carrying
+        # plans. Requires the paged pool (token-granular rollback) and
+        # per-token-addressable KV (SSM/window state cannot roll back) —
+        # same silent-downgrade-with-reason pattern as chunking / prefix.
+        self.speculator: Optional[Drafter] = None
+        self.spec_disabled_reason: Optional[str] = None
+        if ecfg.speculate:
+            ok, why = prefix_cache_supported(self.cfg)
+            if not ok:
+                self.spec_disabled_reason = why
+            elif self.decode_mode != "paged":
+                self.spec_disabled_reason = (
+                    "decode_mode 'gather' (dense-copy fallback has no "
+                    "paged block tables to roll back)")
+            else:
+                self.speculator = PromptLookupDrafter(
+                    max_ngram=ecfg.spec_ngram, max_k=ecfg.spec_k)
         # radix prefix cache (opt-in, and only for configs whose KV is
         # per-token addressable — SSM/cross/MoE/window configs downgrade)
         self.prefix: Optional[PrefixIndex] = None
@@ -404,6 +463,12 @@ class ContinuousBatchingEngine:
         self.shed = 0
         self.shed_reasons: Dict[str, int] = {}
         self.queued_aborts = 0       # aborts caught in the arrival queue
+        # speculative-decoding counters + per-verify-step acceptance rate
+        self.spec_steps = 0          # verify steps executed
+        self.spec_drafted = 0        # draft tokens proposed
+        self.spec_accepted = 0       # draft tokens accepted (committed)
+        self.spec_rejected = 0       # draft tokens rejected (rolled back)
+        self.spec_acceptance_samples: List[float] = BoundedSeries(ml)
 
     # -------------------------------------------- scheduler state views --
     # The scheduler owns this state since the scheduler/executor split;
@@ -537,6 +602,11 @@ class ContinuousBatchingEngine:
         self.shed = 0
         self.shed_reasons = {}
         self.queued_aborts = 0
+        self.spec_steps = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_rejected = 0
+        self.spec_acceptance_samples = BoundedSeries(ml)
         self._last_buckets = None
         self.pool.manager.total_allocations = 0
         self.pool.manager.cow_copies = 0
@@ -568,6 +638,8 @@ class ContinuousBatchingEngine:
         # any still-in-flight speculative token for this request must
         # never commit (no-op in sync mode — nothing is ever in flight)
         self._executor.invalidate(req.req_id)
+        if self.speculator is not None:
+            self.speculator.forget(req.req_id)
         if self.obs is not None:
             self.obs.on_finish(req, reason)
 
@@ -875,6 +947,11 @@ class ContinuousBatchingEngine:
                                       n_prefill=n_prefill, n_decode=0)
             return self.busy
         reqs = plan.reqs
+        if plan.drafts is not None:
+            # speculative verify step: variable tokens-per-request commit,
+            # own telemetry stamps (see _spec_step_sync)
+            self._spec_step_sync(plan, now)
+            return True
         if self.decode_mode == "paged":
             next_tokens = self._decode_paged(reqs)
         else:
@@ -984,6 +1061,154 @@ class ContinuousBatchingEngine:
             logits, *stack_sampling([r.sampling for r in reqs]),
             positions_array([self._pos[rid] + 1 for rid in rids]))
         return np.asarray(next_tokens)
+
+    # ------------------------------------------------ speculative decode --
+    def rollback_kv(self, rid: int, n_tokens: int):
+        """Token-granular KV rollback (phase-guarded pool.rollback):
+        shrink ``rid`` to its first ``n_tokens`` tokens, releasing whole
+        tail blocks. Refuses loudly for a PREFILLING request — chunk
+        progress (``_prefilled``) tracks the table tail, and rolling the
+        table back underneath it would silently desynchronize the two
+        (preempt or abort the request instead)."""
+        if rid in self._prefilled:
+            raise RuntimeError(
+                f"KV rollback of request {rid} during PREFILLING "
+                f"({self._prefilled[rid]} prompt tokens streamed): chunked "
+                f"prefill progress tracks the table tail — preempt or "
+                f"abort instead of rolling back mid-prefill")
+        return self.pool.rollback(rid, n_tokens)
+
+    def _verify_paged(self, plan: StepPlan):
+        """Dispatch + fetch one multi-token verify step (sync mode).
+
+        Same bucketing discipline as ``_decode_paged`` plus a pow2 K
+        bucket: the jit cache stays O(log batch x log tables x log K).
+        Returns host ``(ys, oks)`` sliced to the live batch.
+        """
+        reqs, rids, positions = plan.reqs, plan.rids, plan.positions
+        drafts = plan.drafts
+        B = len(reqs)
+        max_blocks = max(len(self.pool.manager.tables[rid]) for rid in rids)
+        nb_pad = _pow2_bucket(max_blocks, lo=4)
+        batch_pad = _pow2_bucket(B)
+        k_pad = _pow2_bucket(max((len(d) for d in drafts), default=1), lo=1)
+        view = self.pool.view(rids, positions, nb_pad, batch_pad)
+        tokens = np.zeros((batch_pad,), np.int32)
+        tokens[:B] = [self._tokens[rid] for rid in rids]
+        draft_mat, draft_len = stack_drafts(drafts, batch_pad, k_pad)
+        # sampling params are frozen per request: stage them once per
+        # batch composition and replay the device arrays; the per-step
+        # payload (input tokens + drafts) goes up in one batched put
+        samp_key = (tuple(rids), batch_pad)
+        samp = self._spec_samp_cache.get(samp_key)
+        if samp is None:
+            if len(self._spec_samp_cache) > 64:
+                self._spec_samp_cache.clear()
+            samp = tuple(jax.device_put(stack_sampling(
+                [r.sampling for r in reqs], pad_to=batch_pad)))
+            self._spec_samp_cache[samp_key] = samp
+        tokens_d, draft_mat_d, draft_len_d = jax.device_put(
+            (tokens, draft_mat, draft_len))
+        args = (self.params, view.pool, view.tables, view.lengths,
+                view.positions, view.slots, tokens_d, draft_mat_d,
+                draft_len_d, *samp)
+        obs = self.obs
+        if obs is not None:
+            sc = obs.census.get("spec_verify", self._spec_verify_jit, args,
+                                bucket=(batch_pad, nb_pad, k_pad))
+            t0 = time.perf_counter()
+            ys, oks, new_pool = self._spec_verify_jit(*args)
+            t1 = time.perf_counter()
+            jax.block_until_ready((ys, oks, new_pool))
+            t2 = time.perf_counter()
+            obs.on_decode(sc, t0, t1, t2, batch=B, variant="spec_verify")
+            tables = self.pool.manager.tables
+            self._last_buckets = (
+                batch_pad, nb_pad,
+                sum(min(len(tables[rid]), nb_pad) for rid in rids))
+        else:
+            ys, oks, new_pool = self._spec_verify_jit(*args)
+        self.pool.commit(new_pool)
+        ys_np, oks_np = jax.device_get((ys, oks))   # one fetch, one sync
+        return ys_np[:B], oks_np[:B]
+
+    def _spec_commit(self, plan: StepPlan, ys: np.ndarray, oks: np.ndarray,
+                     t_done: float, valid: Optional[List[bool]] = None
+                     ) -> int:
+        """Commit one verify step's results: per row, the accepted draft
+        prefix plus the correction/bonus sample, processed token-by-token
+        through the exact serial finish protocol (a stop token ends the
+        request mid-span and the tokens after it are discarded — serial
+        decode would never have generated them), then the block-table
+        tail reserved for uncommitted drafts is rolled back. Shared by
+        the sync step and the executor's overlapped commit (``valid``
+        masks rows invalidated while the step was in flight). Returns
+        the number of committed tokens.
+        """
+        drafted = accepted = committed = 0
+        for i, r in enumerate(plan.reqs):
+            if valid is not None and not valid[i]:
+                continue
+            rid = r.req_id
+            dl = len(plan.drafts[i])
+            n_ok = accepted_prefix(oks[i], dl)
+            drafted += dl
+            accepted += n_ok
+            if self.speculator is not None:
+                self.speculator.observe(rid, n_ok, dl)
+            finished = False
+            for j in range(n_ok + 1):
+                tok = int(ys[i][j])
+                self._pos[rid] += 1
+                self._tokens[rid] = tok
+                r.state.generated += 1
+                r.state.output_tokens.append(tok)
+                committed += 1
+                if self._finish_or_run(r, t_done):
+                    finished = True
+                    break
+            if not finished:
+                # release the table tail reserved for rejected drafts;
+                # every committed position's K/V is already written and
+                # the next input token's slot is re-reserved next plan
+                self.rollback_kv(rid, self._pos[rid])
+                # plan-time over-reservation (1 + K) corrected to what
+                # actually committed — the overlap length gate reads this
+                self.sched._dispatched[rid] = r.state.generated
+        self.running = [r for r in self.running
+                        if r.state.finish_reason is None]
+        self.spec_steps += 1
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_rejected += drafted - accepted
+        if drafted:
+            self.spec_acceptance_samples.append(accepted / drafted)
+        if self.obs is not None:
+            self.obs.on_spec(self, drafted=drafted, accepted=accepted,
+                             committed=committed)
+        return committed
+
+    def _spec_step_sync(self, plan: StepPlan, now: float):
+        """Sync-mode speculative step: verify inline, commit, stamp the
+        same telemetry series as the plain decode step (decode-token
+        samples count *committed* tokens — tokens-per-step > batch is
+        the speculation win made visible)."""
+        reqs = plan.reqs
+        ys, oks = self._verify_paged(plan)
+        dt = time.perf_counter() - plan.t0
+        committed = self._spec_commit(plan, ys, oks, now + dt)
+        self.itl_samples.append(dt)
+        self.stall_samples.append(plan.t_sched)
+        self.prefill_token_samples.append(plan.n_prefill)
+        self.decode_token_samples.append(committed)
+        self.preemption_samples.append(self.preemptions - plan.p0)
+        self.batch_samples.append(len(reqs))
+        self.kv_fraction_samples.append(self.pool.manager.used_fraction)
+        self.max_kv_fraction = max(self.max_kv_fraction,
+                                   self.pool.manager.used_fraction)
+        if self.obs is not None:
+            self.obs.end_step(self, t0=plan.t0, t_sched_s=plan.t_sched,
+                              n_prefill=plan.n_prefill, n_decode=len(reqs))
 
     # --------------------------------------------------------------- run --
     def run(self, requests: List[Request]) -> ServingMetrics:

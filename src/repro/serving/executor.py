@@ -88,14 +88,16 @@ def _is_ready(arr) -> bool:
 
 
 class InFlightStep:
-    """One dispatched-but-uncommitted decode step."""
+    """One dispatched-but-uncommitted decode (or verify) step."""
     __slots__ = ("plan", "tokens", "batch", "valid", "sc",
-                 "t_call", "t_ret", "t_seen_ready")
+                 "t_call", "t_ret", "t_seen_ready", "oks")
 
     def __init__(self, plan: StepPlan, tokens, batch: int, sc,
                  t_call: float, t_ret: float):
         self.plan = plan
         self.tokens = tokens          # device array; [batch_pad] or [B]
+        # verify steps ([batch_pad, K+1] tokens): the acceptance mask
+        self.oks = None
         self.batch = batch
         # per-row validity: rows are discarded (never committed) when
         # their request finishes / aborts / expires / is preempted while
@@ -138,6 +140,9 @@ class Executor:
         # uncommitted token lives; consumed by the next dispatch, cleared
         # at commit / invalidation
         self._chain: Dict[int, Tuple[InFlightStep, int]] = {}
+        # rids with a speculative verify step in flight: excluded from
+        # planning until the commit pins their post-acceptance length
+        self._spec_pending: set = set()
         self._t_last_commit: Optional[float] = None
         # previous committed step's estimated device-completion time and
         # dispatch-call time (the overlap attribution anchors)
@@ -151,6 +156,7 @@ class Executor:
         quarantine: the pool is being rebuilt, the results are garbage)."""
         self._inflight.clear()
         self._chain.clear()
+        self._spec_pending.clear()
         self._samp_cache = (None, None)
         self._t_last_commit = None
         self._prev_ready_est = None
@@ -163,6 +169,7 @@ class Executor:
         step whose rows are now all dead (it commits nothing and emits no
         phase sample)."""
         self._chain.pop(rid, None)
+        self._spec_pending.discard(rid)
         if not self._inflight:
             return
         for entry in list(self._inflight):
@@ -263,6 +270,15 @@ class Executor:
 
     def _dispatch(self, plan: StepPlan):
         eng = self.eng
+        if plan.drafts is not None:
+            # speculative verify: rows are NOT chained (the committed
+            # token count is acceptance-dependent, so no later plan can
+            # consume their output positionally) — they sit out planning
+            # via _spec_pending until the commit pins their length
+            entry = self._dispatch_verify(plan)
+            self._inflight.append(entry)
+            self._spec_pending.update(plan.rids)
+            return
         if eng.decode_mode == "paged":
             entry = self._dispatch_paged(plan)
         else:
@@ -317,6 +333,55 @@ class Executor:
         return InFlightStep(plan, next_tokens, batch=B, sc=sc,
                             t_call=t_call, t_ret=t_ret)
 
+    def _dispatch_verify(self, plan: StepPlan) -> InFlightStep:
+        """Speculative verify dispatch, fetch deferred: same jit and
+        bucketing as the engine's sync ``_verify_paged`` (speculation is
+        gated on paged mode). Chained rows (previous plain step still in
+        flight) ride draft-free with a device-chained input token."""
+        from repro.serving.engine import _pow2_bucket
+        from repro.serving.spec import stack_drafts
+        eng = self.eng
+        rids, positions = plan.rids, plan.positions
+        B = len(rids)
+        max_blocks = max(len(eng.pool.manager.tables[rid]) for rid in rids)
+        nb_pad = _pow2_bucket(max_blocks, lo=4)
+        batch_pad = _pow2_bucket(B)
+        k_pad = _pow2_bucket(max((len(d) for d in plan.drafts), default=1),
+                             lo=1)
+        view = eng.pool.view(rids, positions, nb_pad, batch_pad)
+        tokens = self._input_tokens(rids, batch_pad)
+        draft_mat, draft_len = stack_drafts(plan.drafts, batch_pad, k_pad)
+        skey = (tuple(rids), batch_pad)
+        if self._samp_cache[0] != skey:
+            temp, top_k, top_p, seed = stack_sampling(
+                [r.sampling for r in plan.reqs], pad_to=batch_pad)
+            self._samp_cache = (skey, (jnp.asarray(temp),
+                                       jnp.asarray(top_k),
+                                       jnp.asarray(top_p),
+                                       jnp.asarray(seed)))
+        args = (eng.params, view.pool, view.tables, view.lengths,
+                view.positions, view.slots, tokens,
+                jnp.asarray(draft_mat), jnp.asarray(draft_len),
+                *self._samp_cache[1])
+        obs = eng.obs
+        sc = None
+        if obs is not None:
+            sc = obs.census.get("spec_verify", eng._spec_verify_jit, args,
+                                bucket=(batch_pad, nb_pad, k_pad))
+        t_call = time.perf_counter()
+        ys, oks, new_pool = eng._spec_verify_jit(*args)
+        t_ret = time.perf_counter()
+        if obs is not None:
+            tables = eng.pool.manager.tables
+            eng._last_buckets = (
+                batch_pad, nb_pad,
+                sum(min(len(tables[rid]), nb_pad) for rid in rids))
+        eng.pool.commit(new_pool)
+        entry = InFlightStep(plan, ys, batch=B, sc=sc,
+                             t_call=t_call, t_ret=t_ret)
+        entry.oks = oks
+        return entry
+
     def _dispatch_gather(self, plan: StepPlan) -> InFlightStep:
         """Dense-copy fallback, fetch deferred: gather, decode, KV row
         scatter, and sampling are all device dispatches (the pool scatter
@@ -359,6 +424,9 @@ class Executor:
         semantics."""
         eng = self.eng
         plan = entry.plan
+        if plan.drafts is not None:
+            self._commit_verify(entry)
+            return
         t_fetch_call = time.perf_counter()
         waited = not _is_ready(entry.tokens)
         try:
@@ -447,5 +515,79 @@ class Executor:
                 dev0=dev0, dev1=max(ready_est, dev0), gap_s=gap_s,
                 dispatch_ahead_s=ahead_s, total_s=max(total_s, 0.0),
                 host_s=t_host_done - t_fetch_ret)
+        self._prev_ready_est = ready_est
+        self._prev_t_call = entry.t_call
+
+    def _commit_verify(self, entry: InFlightStep):
+        """Retire one in-flight speculative verify step: fetch tokens +
+        acceptance mask, release the rows back to planning, and delegate
+        the token-by-token commit / rollback to the engine's shared
+        ``_spec_commit`` (rows invalidated while the step was in flight
+        are skipped — their blocks are already released)."""
+        eng = self.eng
+        plan = entry.plan
+        t_fetch_call = time.perf_counter()
+        waited = not _is_ready(entry.tokens)
+        try:
+            ys = np.asarray(entry.tokens)
+            oks = np.asarray(entry.oks)
+        except Exception as err:
+            err.engine_step = plan.step
+            if hasattr(err, "add_note"):
+                err.add_note(
+                    f"deferred device error from engine step {plan.step} "
+                    f"(speculative verify dispatched under overlap; "
+                    f"surfaced at the next iteration's commit)")
+            raise
+        t_fetch_ret = time.perf_counter()
+        if waited:
+            ready_est = t_fetch_ret
+        elif entry.t_seen_ready is not None:
+            ready_est = entry.t_seen_ready
+        else:
+            ready_est = t_fetch_call
+        for rid in plan.rids:
+            self._spec_pending.discard(rid)
+        t_done = plan.now + (time.perf_counter() - plan.t0)
+        n_valid = sum(entry.valid)
+        committed = eng._spec_commit(plan, ys, oks, t_done,
+                                     valid=entry.valid)
+        t_host_done = time.perf_counter()
+        if n_valid == 0:          # pragma: no cover - dropped eagerly
+            return
+        dt = (t_host_done - self._t_last_commit
+              if self._t_last_commit is not None
+              else t_host_done - plan.t0)
+        self._t_last_commit = t_host_done
+        eng.itl_samples.append(dt)
+        eng.stall_samples.append(plan.t_sched)
+        eng.prefill_token_samples.append(plan.n_prefill)
+        # tokens-per-commit can exceed the batch — the speculation win
+        eng.decode_token_samples.append(committed)
+        delta = max(0, eng.preemptions - self._preempt_seen)
+        self._preempt_seen = eng.preemptions
+        eng.preemption_samples.append(delta)
+        eng.batch_samples.append(n_valid)
+        eng.kv_fraction_samples.append(eng.pool.manager.used_fraction)
+        eng.max_kv_fraction = max(eng.max_kv_fraction,
+                                  eng.pool.manager.used_fraction)
+        if eng.obs is not None:
+            prev_ready = self._prev_ready_est
+            gap_s = (max(0.0, entry.t_call - prev_ready)
+                     if prev_ready is not None else 0.0)
+            ahead_s = (max(0.0, prev_ready - entry.t_ret)
+                       if prev_ready is not None else 0.0)
+            dev0 = (max(entry.t_ret, prev_ready)
+                    if prev_ready is not None else entry.t_ret)
+            total_s = (entry.t_call - self._prev_t_call
+                       if self._prev_t_call is not None
+                       else entry.t_call - plan.t0)
+            eng.obs.end_step_overlap(
+                eng, step=plan.step, t0=plan.t0, t_sched_s=plan.t_sched,
+                n_prefill=plan.n_prefill, n_decode=n_valid, sc=entry.sc,
+                batch=entry.batch, t_call=entry.t_call, t_ret=entry.t_ret,
+                dev0=dev0, dev1=max(ready_est, dev0), gap_s=gap_s,
+                dispatch_ahead_s=ahead_s, total_s=max(total_s, 0.0),
+                host_s=t_host_done - t_fetch_ret, variant="spec_verify")
         self._prev_ready_est = ready_est
         self._prev_t_call = entry.t_call

@@ -86,6 +86,15 @@ class ServingMetrics:
     deadline_expired: int = 0
     # aborts that caught the request still in the arrival queue
     queued_aborts: int = 0
+    # --- speculative decoding (all zero unless EngineConfig.speculate) ---
+    # verify steps run, draft tokens proposed / accepted / rejected, and
+    # the per-verify-step acceptance-rate series (accepted/drafted)
+    spec_steps: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+    spec_rejected: int = 0
+    spec_acceptance_series: List[float] = \
+        dataclasses.field(default_factory=list)
     # --- observability riders (None/0 unless the run opted in) ---
     # memory-gap audit summary (Observability(audit_memory=True))
     memgap: Optional[MemoryGapStats] = None
@@ -124,10 +133,21 @@ class ServingMetrics:
                  for k in FINISH_REASONS]
         return "finish: " + " ".join(parts)
 
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Accepted fraction of all drafted tokens (0 when never drafted)."""
+        return self.spec_accepted / max(self.spec_drafted, 1)
+
     def robustness_row(self) -> str:
         return (f"preempt={self.preemptions} shed={self.shed} "
                 f"deadline={self.deadline_expired} "
                 f"q_abort={self.queued_aborts}")
+
+    def spec_row(self) -> str:
+        return (f"spec: steps={self.spec_steps} "
+                f"drafted={self.spec_drafted} "
+                f"accepted={self.spec_accepted} "
+                f"({self.spec_acceptance_rate * 100:.0f}%)")
 
 
 def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
@@ -143,6 +163,11 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
             shed_reasons: Optional[Dict[str, int]] = None,
             deadline_expired: int = 0,
             queued_aborts: int = 0,
+            spec_steps: int = 0,
+            spec_drafted: int = 0,
+            spec_accepted: int = 0,
+            spec_rejected: int = 0,
+            spec_acceptance_samples: Optional[Sequence[float]] = None,
             memgap: Optional[MemoryGapStats] = None,
             slo_breaches: int = 0,
             slo_recoveries: int = 0) -> ServingMetrics:
@@ -189,6 +214,11 @@ def collect(requests: List[Request], wall_s: float, itl_samples: List[float],
         shed_reasons=dict(shed_reasons or {}),
         deadline_expired=deadline_expired,
         queued_aborts=queued_aborts,
+        spec_steps=spec_steps,
+        spec_drafted=spec_drafted,
+        spec_accepted=spec_accepted,
+        spec_rejected=spec_rejected,
+        spec_acceptance_series=list(spec_acceptance_samples or []),
         memgap=memgap,
         slo_breaches=slo_breaches,
         slo_recoveries=slo_recoveries)
@@ -223,6 +253,11 @@ def collect_from_engine(eng, requests: List[Request],
                    shed=eng.shed, shed_reasons=eng.shed_reasons,
                    deadline_expired=eng.deadline_expired,
                    queued_aborts=eng.queued_aborts,
+                   spec_steps=eng.spec_steps,
+                   spec_drafted=eng.spec_drafted,
+                   spec_accepted=eng.spec_accepted,
+                   spec_rejected=eng.spec_rejected,
+                   spec_acceptance_samples=eng.spec_acceptance_samples,
                    memgap=memgap,
                    slo_breaches=slo_breaches,
                    slo_recoveries=slo_recoveries)

@@ -114,6 +114,19 @@ SERVING_SPECS: List[MetricSpec] = [
     MetricSpec("prefix_blocks_evicted_total", "counter",
                "Prefix-cache blocks evicted back to the pool",
                "prefix.blocks_evicted"),
+    # --- speculative decoding (all zero unless speculate was on) ---
+    MetricSpec("spec_steps_total", "counter",
+               "Speculative verify steps run", "spec_steps"),
+    MetricSpec("spec_drafted_tokens_total", "counter",
+               "Draft tokens proposed to verify steps", "spec_drafted"),
+    MetricSpec("spec_accepted_tokens_total", "counter",
+               "Draft tokens accepted (committed for free)",
+               "spec_accepted"),
+    MetricSpec("spec_rejected_tokens_total", "counter",
+               "Draft tokens rejected (KV rolled back)", "spec_rejected"),
+    MetricSpec("spec_acceptance_rate", "gauge",
+               "Accepted fraction of all drafted tokens",
+               "spec_acceptance_rate"),
     # --- SLO monitor (session-level; same counts on every replica) ---
     MetricSpec("slo_breaches_total", "counter",
                "SLO breach events (multi-window burn rate)",
@@ -187,6 +200,15 @@ CLUSTER_SPECS: List[MetricSpec] = [
                "Wedged-replica detections", "watchdog_trips"),
     MetricSpec("cluster_availability", "gauge",
                "Mean per-replica availability", "availability"),
+    # --- speculative decoding (summed across replicas) ---
+    MetricSpec("cluster_spec_steps_total", "counter",
+               "Speculative verify steps across replicas", "spec_steps"),
+    MetricSpec("cluster_spec_drafted_tokens_total", "counter",
+               "Draft tokens proposed across replicas", "spec_drafted"),
+    MetricSpec("cluster_spec_accepted_tokens_total", "counter",
+               "Draft tokens accepted across replicas", "spec_accepted"),
+    MetricSpec("cluster_spec_rejected_tokens_total", "counter",
+               "Draft tokens rejected across replicas", "spec_rejected"),
 ]
 
 

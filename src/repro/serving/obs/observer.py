@@ -207,10 +207,21 @@ class EngineObserver:
                              variant=variant)
 
     def on_decode(self, sc: Optional[StepCensus], t0: float, t1: float,
-                  t2: float, batch: int):
+                  t2: float, batch: int, variant: str = "decode"):
         """The decode jit call just ran: stash its census + timing for
-        this step's ``end_step`` (which owns the step/roofline emit)."""
-        self._decode_pending = (sc, t0, t1, t2, batch)
+        this step's ``end_step`` (which owns the step/roofline emit).
+        ``variant`` names the roofline bucket ("decode" for the plain
+        step, "spec_verify" for the fused speculative verify)."""
+        self._decode_pending = (sc, t0, t1, t2, batch, variant)
+
+    def on_spec(self, eng, *, drafted: int, accepted: int, committed: int):
+        """One speculative verify step committed: counter track for the
+        acceptance stream (drafted vs accepted vs committed per step —
+        committed > batch is the speculation win made visible)."""
+        self.trace.counter("speculation", self.trace.now(),
+                           {"drafted": drafted, "accepted": accepted,
+                            "committed": committed},
+                           pid=self.pid)
 
     # --------------------------------------------------------- end step --
     def end_step(self, eng, t0: float, t_sched_s: float, n_prefill: int,
@@ -225,12 +236,12 @@ class EngineObserver:
         dispatch_s = device_s = 0.0
         pend = self._decode_pending
         if pend is not None:
-            sc, d0, d1, d2, batch = pend
+            sc, d0, d1, d2, batch, variant = pend
             self._decode_pending = None
             dispatch_s, device_s = d1 - d0, d2 - d1
             self.roofline.record(step=eng.step_count, sc=sc,
                                  device_s=device_s, batch=batch,
-                                 variant="decode")
+                                 variant=variant)
             self.trace.span("dispatch", d0 - e, d1 - e, pid=self.pid,
                             cat="phase")
             self.trace.span("device", d1 - e, d2 - e, pid=self.pid,
@@ -287,7 +298,7 @@ class EngineObserver:
                          t_call: float, t_ret: float, dev0: float,
                          dev1: float, gap_s: float,
                          dispatch_ahead_s: float, total_s: float,
-                         host_s: float):
+                         host_s: float, variant: str = "decode"):
         """Close one *overlapped* engine step, called by the executor at
         commit time (one iteration after the dispatch it describes).
 
@@ -300,7 +311,7 @@ class EngineObserver:
         e = self.trace.epoch
         device_s = max(dev1 - dev0, 0.0)
         self.roofline.record(step=step, sc=sc, device_s=device_s,
-                             batch=batch, variant="decode")
+                             batch=batch, variant=variant)
         self.trace.span("schedule", t0 - e, t0 - e + t_sched_s,
                         pid=self.pid, cat="phase")
         self.trace.span("dispatch", t_call - e, t_ret - e, pid=self.pid,

@@ -53,6 +53,8 @@ import time
 from collections import deque
 from typing import Dict, List, Optional, TYPE_CHECKING
 
+import numpy as np
+
 from repro.serving.workload import FINISH_DEADLINE, FINISH_SHED, Request
 
 if TYPE_CHECKING:   # pragma: no cover - import cycle guard (typing only)
@@ -81,6 +83,10 @@ class StepPlan:
     t0: float                     # perf_counter at step start
     t_sched: float                # schedule phase (admission + prefill) s
     p0: int                       # engine.preemptions before this step
+    # speculative verify plan: per-row draft token arrays, parallel to
+    # ``reqs`` (possibly empty per row — a verify batch may mix drafted
+    # and undrafted requests). None = plain one-token decode step.
+    drafts: Optional[List[np.ndarray]] = None
 
     @property
     def has_decode(self) -> bool:
@@ -116,6 +122,10 @@ class Scheduler:
         # deadlines are only scanned for when at least one admitted
         # request carries one (keeps the deadline-free hot loop unchanged)
         self._has_deadlines = False
+        # overlap + speculation: iterations since the last pipeline-drain
+        # probe (see plan() — chained rows hide their committed history
+        # from the drafter, so the pipeline is periodically drained)
+        self._spec_probe = 0
 
     # ----------------------------------------------- admission control --
     def estimated_queue_delay_s(self) -> float:
@@ -388,6 +398,10 @@ class Scheduler:
         self._pos.pop(rid, None)
         self._dispatched.pop(rid, None)
         eng._executor.invalidate(rid)
+        if eng.speculator is not None:
+            # drafter context is built from output history the requeue is
+            # about to reset — drop it so re-admission starts clean
+            eng.speculator.forget(rid)
         req.state.reset_for_requeue()
         self.waiting.appendleft(req)
         eng.preemptions += 1
@@ -400,7 +414,12 @@ class Scheduler:
         only while its planned output (committed + in-flight) is below
         the length budget — a request at its budget stays in ``running``
         until its final in-flight token commits, but is never planned
-        again."""
+        again. A request with a speculative verify step in flight is
+        never re-planned until that step commits — its committed length
+        (and thus its next write position) depends on how many drafts
+        are accepted, which only the commit knows."""
+        if req.req_id in self.eng._executor._spec_pending:
+            return False
         if not self.eng.ecfg.overlap:
             return True
         return self._dispatched.get(req.req_id, 0) < self.eng._limit(req)
@@ -469,12 +488,30 @@ class Scheduler:
                          t_sched=t_sched, p0=p0)
         if not self.running:
             return empty
+        if (eng.speculator is not None and eng.ecfg.overlap
+                and any(r.req_id in eng._executor._chain
+                        for r in self.running)):
+            # device-chained rows hide their committed history from the
+            # drafter (their newest tokens are still in flight), so under
+            # overlap speculation could never engage after the first
+            # plain dispatch. Probe: every spec_probe_every-th iteration
+            # plan nothing — the executor drains the pipeline, and the
+            # next plan sees fully committed context. While verify steps
+            # run, rows are never chained and the probes cost nothing.
+            self._spec_probe += 1
+            if self._spec_probe >= eng.ecfg.spec_probe_every:
+                self._spec_probe = 0
+                return dataclasses.replace(
+                    empty, t_sched=time.perf_counter() - t0)
         self.ensure_step_capacity()        # may preempt -> shrink running
         reqs = [r for r in self.running if self._needs_step(r)]
         if not reqs:
             return dataclasses.replace(
                 empty, t_sched=time.perf_counter() - t0)
         rids = [r.req_id for r in reqs]
+        drafts = (self._plan_drafts(reqs)
+                  if eng.speculator is not None else None)
+        spec = drafts is not None and any(len(d) for d in drafts)
         positions: List[int] = []
         # ensure capacity for the token being written this step, and fork
         # (copy-on-write) any shared block the write would land in. The
@@ -482,16 +519,79 @@ class Scheduler:
         # shares only full blocks below prompt_len, and writes start at
         # prompt_len), so this is a two-dict-lookup guard for direct
         # pool.share users and future partial-tail sharing.
-        for rid in rids:
+        for i, rid in enumerate(rids):
             pos = self._pos[rid]
             eng.pool.manager.append_token(rid, pos + 1)
             eng.pool.ensure_writable(rid, pos)
             positions.append(pos)
-            self._dispatched[rid] = self._dispatched.get(rid, 0) + 1
-            if eng.ecfg.overlap:
-                # the plan pins this token's position now; the commit
-                # (one iteration later) only appends the token value
-                self._pos[rid] = pos + 1
+            if spec:
+                # verify step: reserve the draft span on top of the base
+                # token (shrinking the draft if blocks are short), count
+                # the worst-case commit against the output budget —
+                # corrected down to the actual commit at commit time —
+                # and leave _pos alone: the committed length depends on
+                # acceptance, which only the commit knows.
+                k = self._reserve_span(rid, pos, len(drafts[i]))
+                if k < len(drafts[i]):
+                    drafts[i] = drafts[i][:k]
+                self._dispatched[rid] = \
+                    self._dispatched.get(rid, 0) + 1 + k
+            else:
+                self._dispatched[rid] = self._dispatched.get(rid, 0) + 1
+                if eng.ecfg.overlap:
+                    # the plan pins this token's position now; the commit
+                    # (one iteration later) only appends the token value
+                    self._pos[rid] = pos + 1
         return StepPlan(step=eng.step_count, now=now, reqs=reqs, rids=rids,
                         positions=positions, n_prefill=n_prefill, t0=t0,
-                        t_sched=t_sched, p0=p0)
+                        t_sched=t_sched, p0=p0,
+                        drafts=drafts if spec else None)
+
+    # ------------------------------------------------------ speculation --
+    def _plan_drafts(self, reqs: List[Request]) -> List[np.ndarray]:
+        """Ask the drafter for a candidate span per planned request.
+
+        Per-row cap: the verify step commits at least one token and at
+        most ``1 + k``, so ``k`` is clipped to keep the worst case inside
+        the request's remaining output budget. Under overlap a request
+        whose previous plain step is still in flight gets no draft — its
+        committed history (the drafter's input) is not host-known yet —
+        and rides the verify batch as a draft-free row instead.
+        """
+        eng = self.eng
+        chained = eng._executor._chain if eng.ecfg.overlap else {}
+        drafts: List[np.ndarray] = []
+        for r in reqs:
+            rid = r.req_id
+            cap = min(eng.ecfg.spec_k,
+                      eng._limit(r) - self._dispatched.get(rid, 0) - 1)
+            if cap < 1 or rid in chained:
+                drafts.append(np.zeros((0,), np.int32))
+            else:
+                drafts.append(np.asarray(
+                    eng.speculator.propose(r, cap), np.int32))
+        return drafts
+
+    def _reserve_span(self, rid: int, pos: int, k: int) -> int:
+        """Reserve block capacity for a ``k``-token draft span on top of
+        the already-reserved base token: the verify step writes KV at
+        positions ``pos .. pos + k``. Speculation is opportunistic, so
+        the span *shrinks* rather than dipping into the admission
+        watermark reserve (``append_token`` may dip — a running request
+        must always take its serial token; drafts must not erode that
+        guarantee). Returns the reserved draft length; forks any shared
+        block the span writes into (COW) so verify writes never alias
+        another owner's data."""
+        if k <= 0:
+            return 0
+        eng = self.eng
+        mgr = eng.pool.manager
+        while k > 0 and not mgr.can_extend(rid, pos + 1 + k):
+            k -= 1
+        if k == 0:
+            return 0
+        mgr.extend(rid, pos + 1 + k)
+        bs = eng.ecfg.block_size
+        for b in range(pos // bs + 1, (pos + k) // bs + 1):
+            eng.pool.ensure_writable(rid, b * bs)
+        return k

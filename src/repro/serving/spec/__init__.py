@@ -1,0 +1,36 @@
+"""Speculative decoding on the paged KV pool.
+
+Decode is memory-bound (the paper's core claim): a decode step at small
+batch streams the full weight + KV footprint to produce one token per
+request, leaving most of the accelerator's compute idle. Speculative
+decoding spends that idle compute verifying *K drafted tokens* in one
+step — accepted drafts commit several tokens per weight pass, rejected
+ones cost compute that was free anyway (SNIPPETS-style break-even math
+lives in :func:`repro.core.bca.speculation_advisor`).
+
+Three pieces:
+
+* :class:`Drafter` / :class:`PromptLookupDrafter` (``drafter.py``) —
+  where candidate tokens come from. The default drafter is draft-model-
+  free: it n-gram-matches the request's own prompt + generated history
+  (prompt-lookup decoding), with a per-request adaptive proposal length.
+* :func:`spec_verify_fn` (``verify.py``) — the jitted multi-token verify
+  step: K+1 exact serial decode iterations chained in one program
+  (``lax.scan``), with in-jit acceptance gating, so accepted outputs are
+  **bit-identical** to serial decode (same kernel, same reduction order,
+  same counter-based RNG).
+* token-granular KV rollback — :meth:`PagedKVCache.rollback` /
+  :meth:`BlockManager.truncate` release the block-table tail reserved
+  for rejected drafts (the verify step itself never writes a garbage KV
+  row — see ``verify.py``).
+
+Scheduling integration lives in :mod:`repro.serving.scheduler`
+(draft-span planning + block reservation) and the engine / executor
+commit paths (variable tokens-per-step, stop-token truncation,
+rollback).
+"""
+from repro.serving.spec.drafter import Drafter, PromptLookupDrafter
+from repro.serving.spec.verify import spec_verify_fn, stack_drafts
+
+__all__ = ["Drafter", "PromptLookupDrafter", "spec_verify_fn",
+           "stack_drafts"]

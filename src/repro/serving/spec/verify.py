@@ -1,0 +1,122 @@
+"""The multi-token verify step (jitted, bit-identity preserving).
+
+One program verifies up to ``K_pad`` drafted tokens per request and
+samples one correction/bonus token: a ``lax.scan`` of ``K_pad + 1``
+*exact serial decode iterations* — the same ``model.decode_step`` over
+a rebuilt :class:`~repro.kvcache.view.PagedCacheView` and the same
+counter-based :func:`~repro.models.sampler.sample_tokens` the plain
+paged step runs — with acceptance gating fused in. Bit-identity with
+serial decode holds **by construction**: every accepted token is
+produced by the identical kernel at the identical position with the
+identical RNG counter; a true single-pass verify (prefill-style
+attention over K+1 query rows) would compute the same logits in a
+different floating-point reduction order and could flip near-tie
+argmaxes. What the fused scan buys over K+1 separate engine steps is
+one dispatch (host overhead amortized (K+1)-fold — the dominant cost
+in the small-batch regime this subsystem targets) and one jit cache
+entry per (batch, table, K) bucket.
+
+Per scan iteration ``j`` (vectorized over the batch):
+
+* feed ``tok`` at write position ``pos`` (iteration 0: the request's
+  committed next-input token, exactly the serial step), which writes
+  its K/V row at ``pos`` inside ``decode_step``;
+* sample ``y`` with RNG counter ``pos + 1`` — the position the sampled
+  token will occupy, identical to serial decode;
+* accept iff the row is still alive, a draft token exists at ``j``,
+  and ``y == drafts[:, j]`` (deterministic sampling makes exact-match
+  acceptance lossless for greedy *and* sampled rows — the serial loop
+  would have produced exactly ``y``); accepted rows advance
+  (``tok = draft``, ``pos += 1``), everything else **freezes**.
+
+Frozen rows (rejected, draft exhausted, or batch padding) re-run their
+last iteration verbatim: same token, same position, same lengths — and
+a decode step's K/V row is a deterministic function of exactly those
+inputs plus pool content that no other row can touch (rows write only
+their own blocks; the row's own position was already written with the
+same values one iteration earlier). The re-write lands the identical
+bytes on the identical (block, slot) address, so the verify step
+**never writes a garbage KV row**: the committed rollback is pure
+block-table truncation (releasing the tail blocks reserved for drafts
+that did not commit), with no data hazard.
+
+Per row the committed result is ``ys[:ncommit]`` with ``ncommit = 1 +
+(accepted prefix length of oks)``: the tokens serial decode would have
+produced, ending in either the first mismatch's corrected sample or
+(full acceptance) one bonus token. The last committed token's K/V is
+*unwritten* — exactly the serial invariant for the next input token.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache.view import PagedCacheView
+from repro.models.sampler import sample_tokens
+
+
+def spec_verify_fn(model, block_size: int, params, pool, tables, lengths,
+                   positions, slots, tokens, drafts, draft_len,
+                   temperature, top_k, top_p, seed):
+    """One fused verify step (jitted by ``StepFunctions``; ``pool``
+    donated). ``drafts`` is ``[B, K_pad]`` int32 with per-row valid
+    prefix ``draft_len`` (rows with ``draft_len == 0`` run one plain
+    decode iteration and freeze — a verify batch may mix speculated and
+    unspeculated rows). Returns ``(ys, oks, new_pool)`` with ``ys``
+    ``[B, K_pad + 1]`` sampled tokens and ``oks`` the acceptance mask
+    (a prefix of True rows by construction — alive chains through it).
+    """
+    K_pad = drafts.shape[1]
+
+    def body(carry, j):
+        pool, tok, pos, lens, alive = carry
+        view = PagedCacheView(pool, tables, lens, pos, slots, block_size)
+        logits, pool = model.decode_step(params, view, tok, pos,
+                                         lengths=lens)
+        y = sample_tokens(logits, temperature, top_k, top_p, seed, pos + 1)
+        d = drafts[:, jnp.minimum(j, K_pad - 1)]
+        ok = alive & (j < draft_len) & (y == d)
+        tok = jnp.where(ok, d, tok)
+        pos = jnp.where(ok, pos + 1, pos)
+        lens = jnp.where(ok, lens + 1, lens)
+        return (pool, tok, pos, lens, ok), (y, ok)
+
+    # padding rows (lengths == 0) start dead and stay frozen; their
+    # writes land in the trash block like every padded decode step
+    alive0 = lengths > 0
+    (pool, _, _, _, _), (ys, oks) = jax.lax.scan(
+        body, (pool, tokens, positions, lengths, alive0),
+        jnp.arange(K_pad + 1))
+    return ys.T, oks.T, pool
+
+
+def stack_drafts(drafts: Sequence[np.ndarray], batch_pad: int,
+                 k_pad: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack per-row draft arrays into the padded ``[batch_pad, k_pad]``
+    matrix + ``[batch_pad]`` valid-length vector ``spec_verify_fn``
+    consumes (padding rows and pad columns are zeros with length 0)."""
+    mat = np.zeros((batch_pad, k_pad), np.int32)
+    lens = np.zeros((batch_pad,), np.int32)
+    for i, d in enumerate(drafts):
+        k = min(len(d), k_pad)
+        mat[i, :k] = d[:k]
+        lens[i] = k
+    return mat, lens
+
+
+def accepted_prefix(oks_row: np.ndarray, draft_len: int) -> int:
+    """Length of the accepted draft prefix for one row (host-side
+    commit helper): ``oks`` is monotone (True prefix) by construction,
+    but walk it defensively so a malformed mask can't over-commit."""
+    n = 0
+    for j in range(draft_len):
+        if not oks_row[j]:
+            break
+        n += 1
+    return n
+
+
+__all__: List[str] = ["spec_verify_fn", "stack_drafts", "accepted_prefix"]

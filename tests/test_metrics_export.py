@@ -157,6 +157,17 @@ def test_registry_covers_robustness_counters():
         assert field in serving_paths, f"{field} missing from registry"
 
 
+def test_registry_covers_spec_counters():
+    serving_paths = {s.path for s in SERVING_SPECS}
+    for field in ("spec_steps", "spec_drafted", "spec_accepted",
+                  "spec_rejected", "spec_acceptance_rate"):
+        assert field in serving_paths, f"{field} missing from registry"
+    cluster_paths = {s.path for s in CLUSTER_SPECS}
+    for field in ("spec_steps", "spec_drafted", "spec_accepted",
+                  "spec_rejected"):
+        assert field in cluster_paths, f"{field} missing from registry"
+
+
 def test_registry_names_unique():
     names = [s.name for s in SERVING_SPECS + CLUSTER_SPECS]
     assert len(names) == len(set(names))

@@ -1,0 +1,309 @@
+"""Speculative decoding subsystem: prompt-lookup drafter (periodic
+tiling, adaptive K, cooldown, context rebuild), token-granular rollback
+edge cases (block boundaries, COW-shared blocks, exact accounting,
+mid-prefill refusal), engine bit-identity (greedy / sampled / overlap),
+live spec counters through the metrics pipeline, and the BCA
+speculation advisor."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import H100_PAPER, SpecPlan, speculation_advisor
+from repro.kvcache.paged import BlockManager
+from repro.models.model import Model, init_params
+from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                           SamplingParams, lint_prometheus,
+                           metrics_from_json, metrics_to_json,
+                           prometheus_text, repetitive_workload)
+from repro.serving.spec import PromptLookupDrafter
+from repro.serving.workload import Request
+
+
+# ----------------------------------------------------------- drafter sim --
+class _Req:
+    """Minimal request shape the drafter reads (req_id / prompt /
+    prompt_len / state.output_tokens)."""
+    class _St:
+        pass
+
+    def __init__(self, rid, prompt, out):
+        self.req_id = rid
+        self.prompt = np.asarray(prompt, np.int64)
+        self.prompt_len = len(prompt)
+        self.state = self._St()
+        self.state.output_tokens = list(out)
+
+
+def test_lookup_tiles_short_period_out_to_k():
+    """A period-2 stream's most recent n-gram match has only a 2-token
+    observed continuation; the prediction must extend it periodically."""
+    d = PromptLookupDrafter(max_k=8, start_k=8)
+    r = _Req(0, [7, 9, 7, 9, 7, 9], [])
+    got = d.propose(r, 8)
+    assert got.tolist() == [7, 9, 7, 9, 7, 9, 7, 9]
+
+
+def test_lookup_prefers_longest_ngram():
+    """[..1,2,3..]: the 3-gram match must beat a shorter-gram match at a
+    more recent position."""
+    d = PromptLookupDrafter(max_ngram=3, max_k=4, start_k=4)
+    #      0  1  2  3  4  5  6  7  8
+    ctx = [1, 2, 3, 5, 6, 3, 1, 2, 3]
+    got = d.propose(_Req(0, ctx, []), 4)
+    # tail 3-gram [1,2,3] matches at i=0 -> continuation starts with 5
+    assert got[0] == 5
+
+
+def test_propose_empty_on_novel_text():
+    d = PromptLookupDrafter()
+    r = _Req(0, list(range(100, 140)), [])   # all-distinct tokens
+    assert d.propose(r, 8).size == 0
+
+
+def test_drafter_reads_generated_history():
+    """Matches must come from prompt + outputs, not the prompt alone."""
+    d = PromptLookupDrafter(min_ngram=1)
+    r = _Req(0, [1, 2, 3, 4], [50, 60, 70, 50, 60])
+    got = d.propose(r, 2)
+    assert got.size > 0 and got[0] == 70     # [50,60] recurred in output
+
+
+def test_adaptive_k_full_acceptance_grows():
+    d = PromptLookupDrafter(start_k=2, max_k=8)
+    d.observe(0, 2, 2)
+    assert d._k[0] == 4
+    d.observe(0, 4, 4)
+    assert d._k[0] == 8
+    d.observe(0, 8, 8)
+    assert d._k[0] == 8                      # capped at max_k
+
+
+def test_adaptive_k_partial_resets_to_accepted():
+    d = PromptLookupDrafter(start_k=8, max_k=8)
+    d.observe(0, 3, 8)
+    assert d._k[0] == 3
+    d.observe(0, 0, 3)                       # total reject halves
+    assert d._k[0] == 1
+
+
+def test_reject_streak_triggers_cooldown():
+    d = PromptLookupDrafter(start_k=4, streak_limit=2, cooldown=3)
+    r = _Req(0, [7, 9, 7, 9, 7, 9], [])
+    d.observe(0, 0, 4)
+    d.observe(0, 0, 2)                       # second total reject
+    for _ in range(3):                       # cooldown: no proposals
+        assert d.propose(r, 8).size == 0
+    assert d.propose(r, 8).size > 0          # then drafting resumes
+
+
+def test_context_rebuilds_after_requeue_shrink():
+    """Preemption resets output history; the incremental context buffer
+    must rebuild instead of serving stale tokens."""
+    d = PromptLookupDrafter()
+    r = _Req(0, [7, 9, 7, 9], [1, 2, 3, 4, 5])
+    d.propose(r, 4)                          # buffer now prompt+5 outputs
+    r.state.output_tokens = []               # requeue wiped the outputs
+    got = d.propose(r, 4)
+    assert got.tolist() == [7, 9, 7, 9]      # prompt-only period-2 tiling
+
+
+def test_forget_drops_all_request_state():
+    d = PromptLookupDrafter()
+    r = _Req(5, [7, 9, 7, 9], [])
+    d.propose(r, 4)
+    d.observe(5, 0, 4)
+    d.forget(5)
+    for store in (d._k, d._streak, d._cool, d._ctx):
+        assert 5 not in store
+
+
+def test_drafter_validates_construction():
+    with pytest.raises(ValueError, match="min_ngram"):
+        PromptLookupDrafter(max_ngram=2, min_ngram=3)
+    with pytest.raises(ValueError, match="max_k"):
+        PromptLookupDrafter(max_k=0)
+
+
+# ------------------------------------------------------ rollback edges --
+def test_truncate_frees_exact_block_boundary():
+    bm = BlockManager(8, 8)
+    bm.allocate(0, 24)                       # 3 blocks
+    assert bm.truncate(0, bm.blocks_needed(17)) == []   # 17 tokens: 3 blocks
+    dropped = bm.truncate(0, bm.blocks_needed(16))      # 16 tokens: 2 blocks
+    assert len(dropped) == 1
+    assert bm.free_blocks == 8 - 2
+    assert len(bm.tables[0]) == 2
+    assert bm.free_blocks + len(bm.refs) == bm.num_blocks
+
+
+def test_truncate_to_zero_and_validation():
+    bm = BlockManager(8, 8)
+    bm.allocate(0, 20)
+    assert len(bm.truncate(0, 0)) == 3       # full rollback keeps the table
+    assert bm.tables[0] == [] and bm.free_blocks == 8
+    with pytest.raises(ValueError, match="keep_blocks"):
+        bm.truncate(0, -1)
+    assert bm.truncate(99, 0) == []          # unknown request: no-op
+
+
+def test_truncate_cow_shared_block_survives():
+    """Rolling one fork back must not reclaim a block the other fork
+    (or the prefix index) still owns — refcounts, not table length,
+    decide reclamation."""
+    bm = BlockManager(8, 8)
+    blocks = bm.allocate(0, 16)              # 2 blocks
+    bm.share(1, blocks)                      # fork: refcount 2 on both
+    dropped = bm.truncate(1, 1)
+    assert dropped == [blocks[1]]
+    assert bm.ref_count(blocks[1]) == 1      # req 0 still owns it
+    assert bm.free_blocks == 8 - 2           # nothing physically freed
+    bm.truncate(0, 1)                        # last owner drops it
+    assert bm.free_blocks == 8 - 1
+    assert bm.free_blocks + len(bm.refs) == bm.num_blocks
+
+
+# ------------------------------------------------- engine integration --
+@pytest.fixture(scope="module")
+def setup(rules):
+    cfg = reduced(get_config("opt-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = Model(cfg, rules)
+    return cfg, params, model
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=4, block_size=8, kv_pool_tokens=4096,
+                max_model_len=128, prefill_bucket=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _wl(cfg, seed=3, n=4, max_new=16, sampling=None):
+    return repetitive_workload(n, cfg.vocab_size, prompt_len=32,
+                               max_new_tokens=max_new, repeat_rate=1.0,
+                               phrase_len=8, pool_size=1, seed=seed,
+                               sampling=sampling)
+
+
+def _outputs(reqs):
+    return [list(map(int, r.output_tokens)) for r in reqs]
+
+
+def _pair(cfg, params, model, seed=3, sampling=None, **ecfg_kw):
+    outs = {}
+    for spec in (False, True):
+        eng = ContinuousBatchingEngine(model, params,
+                                       _ecfg(speculate=spec, **ecfg_kw))
+        if spec:
+            assert eng.speculator is not None, eng.spec_disabled_reason
+        reqs = _wl(cfg, seed=seed, sampling=sampling)
+        m = eng.run(reqs)
+        outs[spec] = _outputs(reqs)
+    return outs, m, eng
+
+
+def test_greedy_bit_identity_and_exact_accounting(setup):
+    cfg, params, model = setup
+    outs, m, eng = _pair(cfg, params, model)
+    assert outs[False] == outs[True]
+    assert m.spec_steps > 0 and m.spec_accepted > 0
+    assert m.spec_drafted == m.spec_accepted + m.spec_rejected
+    # every block came home after the rollbacks
+    from repro.serving.obs.auditor import audit_engine
+    wb = audit_engine(eng)
+    assert wb.used_bytes == 0 and wb.block_pad_bytes == 0
+    assert wb.physical_bytes == wb.pool_bytes
+    assert eng.pool.manager.free_blocks == eng.pool.manager.num_blocks
+
+
+def test_sampled_identity_with_prefix_and_chunked_prefill(setup):
+    """The hard composition: temperature/top-k/top-p sampling + prefix
+    cache + chunked prefill, speculation on vs off."""
+    cfg, params, model = setup
+    sampling = SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
+                              seed=11, max_new_tokens=16)
+    outs, m, _ = _pair(cfg, params, model, seed=5, sampling=sampling,
+                       prefix_cache=True, prefill_chunk_tokens=16)
+    assert outs[False] == outs[True]
+    assert m.spec_steps > 0
+
+
+def test_overlap_mode_identity(setup):
+    cfg, params, model = setup
+    outs, m, _ = _pair(cfg, params, model, seed=7, overlap=True)
+    assert outs[False] == outs[True]
+    assert m.spec_steps > 0
+
+
+def test_rollback_refused_mid_prefill(setup):
+    cfg, params, model = setup
+    eng = ContinuousBatchingEngine(model, params, _ecfg())
+    eng._prefilled[42] = 16                  # chunked prefill in flight
+    with pytest.raises(RuntimeError, match="PREFILLING"):
+        eng.rollback_kv(42, 8)
+
+
+def test_spec_counters_roundtrip_and_prometheus(setup):
+    cfg, params, model = setup
+    eng = ContinuousBatchingEngine(model, params, _ecfg(speculate=True))
+    m = eng.run(_wl(cfg, seed=3))
+    assert m.spec_steps > 0 and m.spec_drafted > 0
+    assert 0.0 < m.spec_acceptance_rate <= 1.0
+    got = metrics_from_json(metrics_to_json(m))
+    assert dataclasses.asdict(got) == dataclasses.asdict(m)
+    text = prometheus_text(m)
+    assert lint_prometheus(text) == []
+    assert f"repro_spec_steps_total {m.spec_steps}" in text
+    assert f"repro_spec_accepted_tokens_total {m.spec_accepted}" in text
+    assert "repro_spec_acceptance_rate" in text
+
+
+def test_spec_disabled_reason_on_unsupported_path(setup):
+    """Gather-mode (non-paged) decode can't roll back token-granularly;
+    the engine must fall back with a recorded reason, not crash."""
+    cfg, params, model = setup
+    eng = ContinuousBatchingEngine(
+        model, params, _ecfg(speculate=True, decode_mode="gather"))
+    assert eng.speculator is None
+    assert eng.spec_disabled_reason
+
+
+# ------------------------------------------------------------- advisor --
+def test_advisor_validates_inputs():
+    cfg = reduced(get_config("opt-1.3b"))
+    with pytest.raises(ValueError, match="alpha"):
+        speculation_advisor(cfg, H100_PAPER, batch=1, alpha=1.0)
+    with pytest.raises(ValueError, match="batch"):
+        speculation_advisor(cfg, H100_PAPER, batch=0)
+    with pytest.raises(ValueError, match="max_k"):
+        speculation_advisor(cfg, H100_PAPER, batch=1, max_k=-1)
+
+
+def test_advisor_small_batch_speculates():
+    cfg = reduced(get_config("opt-1.3b"))
+    sp = speculation_advisor(cfg, H100_PAPER, batch=2, alpha=0.6, max_k=8)
+    assert isinstance(sp, SpecPlan) and sp.enabled
+    assert 1 <= sp.k <= 8
+    assert sp.speedup_x > 1.0
+    assert sp.expected_tokens == pytest.approx(
+        (1 - 0.6 ** (sp.k + 1)) / (1 - 0.6))
+    assert "speculate" in sp.summary()
+
+
+def test_advisor_past_break_even_disables():
+    cfg = reduced(get_config("opt-1.3b"))
+    huge = int(speculation_advisor(cfg, H100_PAPER,
+                                   batch=1).break_even_batch) * 4
+    sp = speculation_advisor(cfg, H100_PAPER, batch=huge, alpha=0.6)
+    assert not sp.enabled and sp.k == 0
+    assert sp.speedup_x == pytest.approx(1.0)
+    assert "off" in sp.summary()
+
+
+def test_advisor_zero_alpha_never_pays():
+    cfg = reduced(get_config("opt-1.3b"))
+    sp = speculation_advisor(cfg, H100_PAPER, batch=2, alpha=0.0)
+    assert sp.expected_tokens == 1.0 and not sp.enabled
